@@ -1,0 +1,59 @@
+"""Paper Fig. 18 — KVCache transfer: latency vs cache size through the
+PD-disaggregation path (prefill -> transfer -> paged ingest -> decode),
+plus the modeled pod-to-pod wire time at v5e link bandwidth for the real
+32k caches (from the dry-run records when present)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.configs.base import get_config, reduced
+from repro.core.descriptors import TransferPlan
+from repro.core.kvtransfer import KVTransferEngine
+from repro.models.registry import build_model
+
+
+def run():
+    rows = []
+    cfg = reduced(get_config("gemma-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    for plen in (16, 64, 256):
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, plen), 0,
+                                    cfg.vocab_size)
+        _, caches = jax.jit(model.prefill)(params, tokens)
+        eng = KVTransferEngine(model, 2, plen, TransferPlan())
+        us = time_call(lambda: jax.block_until_ready(eng.transfer(caches)),
+                       iters=3)
+        mb = eng.stats.payload_bytes / 1e6
+        rows.append((f"fig18_kvtransfer_{plen}tok", us,
+                     f"payload_MB={mb:.2f};header_B={eng.stats.header_bytes};"
+                     f"gbps={mb/us*1e3:.2f}"))
+        engq = KVTransferEngine(model, 2, plen,
+                                TransferPlan(quantize_bits=8))
+        usq = time_call(lambda: jax.block_until_ready(engq.transfer(caches)),
+                        iters=3)
+        rows.append((f"fig18_kvtransfer_{plen}tok_int8", usq,
+                     f"wire_saving=2x;latency_ratio={usq/us:.2f}"))
+    # modeled pod->pod wire time for the full decode_32k caches
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for arch in ("gemma-2b", "deepseek-v3-671b"):
+        f = os.path.join(root, "experiments/dryrun/baseline",
+                         f"{arch}__decode_32k__multi.json")
+        if not os.path.exists(f):
+            continue
+        cfg_full = get_config(arch)
+        model_full = build_model(cfg_full)
+        from repro.utils.costmodel import cache_bytes_total
+        total = cache_bytes_total(model_full, 128, 32768)
+        per_dev = total / 512
+        t_us = per_dev / 50e9 * 1e6       # sprayed: every link carries 1/512
+        rows.append((f"fig18_pod_transfer_model_{arch}", t_us,
+                     f"cache_GB={total/1e9:.1f};sprayed_us={t_us:.0f};"
+                     f"single_path_us={total/16/50e9*1e6:.0f}"))
+    return rows

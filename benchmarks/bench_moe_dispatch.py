@@ -1,0 +1,42 @@
+"""Table-1/§5.3 analogue for the training plane: MoE dispatch wire bytes,
+FlexiNS a2a path vs staged (replicated+psum) baseline, from lowered HLO on
+a fake (2,4) mesh."""
+from __future__ import annotations
+
+from benchmarks.common import run_sharded_probe
+
+
+def run():
+    out = run_sharded_probe("""
+        import dataclasses
+        from repro.configs.base import get_config, reduced
+        from repro.models import moe
+        from repro.models.module import init_params, abstract_params
+        import repro.perf as perf
+
+        # representative ratios need non-toy dims
+        cfg = dataclasses.replace(
+            reduced(get_config("granite-moe-1b-a400m")),
+            d_model=256,
+            moe=dataclasses.replace(reduced(get_config(
+                "granite-moe-1b-a400m")).moe, n_experts=16, top_k=2,
+                d_ff_expert=256))
+        specs = moe.moe_spec(cfg)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        x = jax.ShapeDtypeStruct((8, 64, cfg.d_model), jnp.bfloat16)
+        for impl in ("a2a", "replicated"):
+            perf.set_flags(moe_impl=impl)
+            with sharding.use_mesh(mesh, fsdp=False):
+                params = sharding.abstract_with_shardings(specs, "bfloat16")
+                c = jax.jit(lambda p, x: moe.moe_apply(p, x, cfg)) \
+                    .lower(params, x).compile()
+                r = hlo_cost.analyze(c.as_text())
+                print(impl, r["collective"]["wire_bytes"])
+    """)
+    vals = dict(line.split() for line in out.strip().splitlines())
+    a2a, rep = float(vals["a2a"]), float(vals["replicated"])
+    return [
+        ("moe_dispatch_flexins_a2a", 0.0, f"wire_bytes_per_dev={a2a:.0f}"),
+        ("moe_dispatch_staged", 0.0,
+         f"wire_bytes_per_dev={rep:.0f};overhead={rep/max(a2a,1):.2f}x"),
+    ]

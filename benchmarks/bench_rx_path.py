@@ -1,0 +1,47 @@
+"""Paper Fig. 14 — RX path vs working-set size: the T2 ingest keeps a
+constant resident set (2 VMEM tiles) while the working set (the paged
+cache) grows arbitrarily. We sweep the cache size, measure per-byte ingest
+cost on CPU, and report the modeled residency for both strategies."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.kernels.kv_ingest.ops import kv_ingest
+from repro.kernels.kv_ingest import ref as ki_ref
+
+PAGE_TOKENS, KVH, HD = 16, 8, 64
+TILE_BYTES = PAGE_TOKENS * KVH * HD * 4
+
+
+def run():
+    rows = []
+    n_tiles = 16
+    payload = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (n_tiles, PAGE_TOKENS, KVH, HD)).astype(np.float32))
+    ref_fn = jax.jit(ki_ref.reference, donate_argnums=(0,))
+    for n_pages in (64, 256, 1024, 4096):
+        ids = jnp.asarray(
+            np.random.default_rng(1).permutation(n_pages)[:n_tiles]
+            .astype(np.int32))
+
+        def mk():
+            return jnp.zeros((n_pages, PAGE_TOKENS, KVH, HD), jnp.float32)
+
+        us_ref = time_call(lambda: ref_fn(mk(), payload, ids), iters=3)
+        ws_mb = n_pages * TILE_BYTES / 1e6
+        rows.append((f"fig14_ingest_ws{ws_mb:.0f}MB", us_ref,
+                     f"working_set_MB={ws_mb:.1f};"
+                     f"resident_model_flexins_B={2*TILE_BYTES};"
+                     f"resident_model_naive_B={int(ws_mb*1e6)};"
+                     f"gbps={n_tiles*TILE_BYTES/us_ref/1e3:.2f}"))
+    # kernel path (interpret mode: correctness rig, not a speed claim)
+    ids = jnp.arange(n_tiles, dtype=jnp.int32)
+    us_k = time_call(
+        lambda: kv_ingest(jnp.zeros((64, PAGE_TOKENS, KVH, HD), jnp.float32),
+                          payload, ids, interpret=True), iters=2)
+    rows.append(("fig14_ingest_pallas_interpret", us_k,
+                 "note=interpret-mode-correctness-rig"))
+    return rows

@@ -1,0 +1,24 @@
+"""Paper Fig. 17 — disaggregated block storage (Solar transport): 4KB READ
+IOPS, FlexiNS path (aggregated opcode + coalesced gather + fused crc) vs
+the Solar-CPU baseline (per-block host memcpy + host checksum)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.solar import SolarBlockStore
+
+
+def run():
+    rows = []
+    store = SolarBlockStore(n_blocks=8192)
+    for clients, depth in ((1, 32), (4, 32), (12, 32)):
+        n = clients * depth
+        lbas = np.random.default_rng(n).integers(0, 8192, n).astype(np.int32)
+        us_f = time_call(lambda: store.read_flexins(lbas), iters=5)
+        us_c = time_call(lambda: store.read_cpu(lbas), iters=3)
+        rows.append((f"fig17_solar_c{clients}_flexins", us_f,
+                     f"kiops={n/us_f*1e3:.1f}"))
+        rows.append((f"fig17_solar_c{clients}_cpu", us_c,
+                     f"kiops={n/us_c*1e3:.1f};speedup={us_c/us_f:.2f}x"))
+    return rows

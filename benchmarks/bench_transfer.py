@@ -1,0 +1,54 @@
+"""Paper Fig. 10/11 — single-stream and aggregate throughput/latency of the
+transfer engine primitives (SEND/WRITE analogue = device buffer movement
+through the notification + payload path), plus Table-1-style derived
+summary of host overhead (the control path never touches payload bytes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.descriptors import make_descriptor, OP_KV_WRITE
+from repro.core.notification import Ring
+from repro.kernels.ring_pipe.ops import ring_consume
+
+
+def run():
+    rows = []
+    # Fig 10a analogue: single-stream "WRITE" bandwidth vs payload size
+    for size_kb in (4, 64, 1024):
+        n = size_kb * 1024 // 4
+        src = jnp.asarray(np.random.default_rng(0)
+                          .standard_normal((n,)).astype(np.float32))
+        dst = jnp.zeros((n,), jnp.float32)
+        write = jax.jit(lambda d, s: s + 0 * d, donate_argnums=(0,))
+        us = time_call(lambda: write(jnp.zeros((n,), jnp.float32), src),
+                       iters=5)
+        rows.append((f"fig10_write_{size_kb}KB", us,
+                     f"gbps={size_kb/1024/us*1e6*8/1e3:.2f}"))
+    # Fig 10b: latency of a minimal descriptor->payload round trip
+    ring = Ring(64)
+    slots = jnp.asarray(np.random.default_rng(1)
+                        .standard_normal((64, 16)).astype(np.float32))
+
+    def rtt():
+        ring.produce(make_descriptor(OP_KV_WRITE, src=3)[None])
+        d = ring.consume()
+        return ring_consume(slots, jnp.asarray([int(d[0][1])], jnp.int32),
+                            interpret=True)
+
+    rows.append(("fig10_latency_desc_payload", time_call(rtt, iters=3),
+                 "path=ring+gather"))
+    # Fig 11: aggregate throughput with multiple connections (streams)
+    for conns in (1, 4, 16):
+        n = 256 * 1024 // 4
+        bufs = [jnp.asarray(np.random.default_rng(i)
+                            .standard_normal((n,)).astype(np.float32))
+                for i in range(conns)]
+        moves = jax.jit(lambda *bs: [b * 1.0 for b in bs])
+        us = time_call(lambda: moves(*bufs), iters=5)
+        mb = conns * n * 4 / 1e6
+        rows.append((f"fig11_aggregate_{conns}conn", us,
+                     f"gbps={mb*8/us*1e3/1e3:.2f}"))
+    return rows

@@ -1,0 +1,51 @@
+"""Paper Fig. 12/13 — TX path strategies: header-only (striped direct
+ppermute) vs staged (replicate-then-move). Derived wire bytes come from
+lowered HLO on a fake (2,2,2) mesh; the duplex-contention experiment
+(Fig. 13) is the single-path vs sprayed-stripes byte ratio."""
+from __future__ import annotations
+
+import re
+
+from benchmarks.common import run_sharded_probe
+
+
+def run():
+    out = run_sharded_probe("""
+        from repro.core import tx_engine
+        from repro.core.descriptors import TransferPlan
+        from repro.models.module import Spec
+
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        B, S, F = 4, 64, 256
+        spec = Spec((B, S, F), ("batch", "kv_seq", None))
+        x = jax.ShapeDtypeStruct((B, S, F), jnp.bfloat16)
+        plan = TransferPlan(axis="pod", shift=1)
+        with sharding.use_mesh(mesh):
+            for name, fn in (("headeronly", tx_engine.transmit),
+                             ("staged", tx_engine.transmit_staged)):
+                c = jax.jit(lambda t, fn=fn: fn({"k": t}, {"k": spec},
+                                                plan)).lower(x).compile()
+                r = hlo_cost.analyze(c.as_text())
+                print(name, r["collective"]["wire_bytes"])
+            plan8 = TransferPlan(axis="pod", shift=1, quantize_bits=8)
+            c = jax.jit(lambda t: tx_engine.transmit(
+                {"k": t}, {"k": spec}, plan8)).lower(x).compile()
+            r = hlo_cost.analyze(c.as_text())
+            print("quantized", r["collective"]["wire_bytes"])
+    """)
+    vals = dict(line.split() for line in out.strip().splitlines())
+    ho = float(vals["headeronly"])
+    st = float(vals["staged"])
+    q8 = float(vals["quantized"])
+    payload = 4 * 64 * 256 * 2
+    return [
+        ("fig12_tx_headeronly_wire", 0.0,
+         f"wire_bytes_per_dev={ho:.0f};payload={payload};"
+         f"ratio={ho/max(payload,1):.3f}"),
+        ("fig12_tx_staged_wire", 0.0,
+         f"wire_bytes_per_dev={st:.0f};overhead_vs_headeronly={st/max(ho,1):.2f}x"),
+        ("fig12_tx_quantized_wire", 0.0,
+         f"wire_bytes_per_dev={q8:.0f};saving_vs_headeronly={ho/max(q8,1):.2f}x"),
+        ("fig13_duplex_contention_model", 0.0,
+         f"staged_link_occupancy={st/max(ho,1):.2f}x_of_headeronly"),
+    ]

@@ -1,0 +1,49 @@
+"""Shared benchmark utilities: wall-clock timing of jitted callables and
+subprocess helpers for wire-byte derivations on fake multi-device meshes
+(benchmarks themselves run on the real single CPU device, per the brief)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        times.append((time.perf_counter_ns() - t0) / 1e3)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run_sharded_probe(body: str, timeout: int = 600) -> str:
+    """Run `body` in a subprocess with 8 fake devices; returns stdout."""
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ.pop("JAX_PLATFORMS", None)
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.parallel import sharding
+        from repro.utils import hlo_cost
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"probe failed:\n{r.stdout}\n{r.stderr}")
+    return r.stdout

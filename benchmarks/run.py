@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig15]
+
+Prints ``name,us_per_call,derived`` CSV (the brief's contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_transfer",       # Fig 10 + 11
+    "benchmarks.bench_tx_path",        # Fig 12 + 13
+    "benchmarks.bench_rx_path",        # Fig 14
+    "benchmarks.bench_notification",   # Fig 15
+    "benchmarks.bench_offload",        # Fig 16
+    "benchmarks.bench_solar",          # Fig 17
+    "benchmarks.bench_kvtransfer",     # Fig 18
+    "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="")
+    args = p.parse_args()
+
+    import importlib
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            traceback.print_exc()
+            failed.append(modname)
+    if failed:
+        print(f"# FAILED modules: {failed}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

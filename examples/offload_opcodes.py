@@ -1,0 +1,49 @@
+"""Programmable offloading engine (paper §3.5, Table 2, Listing 1):
+register custom opcodes and run the paper's two showcase functions —
+batched RDMA READ and server-side linked-list traversal.
+
+    PYTHONPATH=src python examples/offload_opcodes.py
+"""
+import numpy as np
+
+from repro.core.descriptors import OP_BATCH_READ, OP_LIST_TRAVERSAL
+from repro.core.offload_engine import (OffloadEngine, install_batched_read,
+                                       install_list_traversal)
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # ---- batched RDMA READ (Listing 1) ----
+    region = rng.standard_normal((1024, 64)).astype(np.float32)
+    eng = OffloadEngine()
+    eng.register_dma_region("kv_store", region)
+    install_batched_read(eng, "kv_store", value_size=64)
+    offsets = rng.integers(0, 1024, 16).astype(np.int32)
+    resp = eng.handle_packet(OP_BATCH_READ, offsets)
+    ok = np.allclose(np.asarray(resp).reshape(16, 64), region[offsets])
+    ctx = eng._qps[0]
+    print(f"batched READ of 16 scattered values: correct={ok}, "
+          f"coalesced into {ctx.dma_launches} DMA launch(es)")
+
+    # ---- linked-list traversal (Fig. 16a) ----
+    n = 32
+    rec = np.zeros((n, 10), np.float32)
+    order = rng.permutation(n)
+    for i, node in enumerate(order):
+        rec[node, 0] = 500 + i                              # key by depth
+        rec[node, 1] = order[i + 1] if i + 1 < n else -1    # next ptr
+        rec[node, 2:] = i
+    eng2 = OffloadEngine()
+    eng2.register_dma_region("list", rec.ravel())
+    install_list_traversal(eng2, "list", value_size=8)
+    target_depth = 20
+    resp = eng2.handle_packet(OP_LIST_TRAVERSAL,
+                              (500.0 + target_depth, int(order[0])))
+    print(f"list traversal to depth {target_depth}: "
+          f"value={np.asarray(resp)[0]:.0f} (expected {target_depth}) — "
+          f"one on-device walk instead of {target_depth + 1} round trips")
+
+
+if __name__ == "__main__":
+    main()

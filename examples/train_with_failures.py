@@ -1,0 +1,61 @@
+"""Fault-tolerant training demo: train a reduced model with checkpointing,
+inject a node failure mid-run, and verify the restarted run converges to
+EXACTLY the same state (deterministic replay — the data pipeline is a pure
+function of step).
+
+    PYTHONPATH=src python examples/train_with_failures.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.models.registry import build_model
+from repro.train import data as data_lib
+from repro.train import optimizer as optim
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import TrainController
+from repro.train.train_loop import make_train_step
+
+
+def main():
+    cfg = reduced(get_config("granite-moe-1b-a400m"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = optim.OptConfig(lr=2e-3, warmup_steps=5)
+    opt_state = optim.init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(model, cfg, opt_cfg))
+
+    def step_fn(state, batch):
+        p, o, m = step(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    def batch_fn(i):
+        return data_lib.synthetic_batch(i, 2, 24, cfg.vocab_size)
+
+    state0 = {"params": params, "opt": opt_state}
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        ref = TrainController(step_fn, batch_fn, Checkpointer(d1),
+                              checkpoint_every=8)
+        ref_state, _, ref_hist = ref.run(state0, 0, 24)
+
+        ctl = TrainController(step_fn, batch_fn, Checkpointer(d2),
+                              checkpoint_every=8)
+        got_state, last, hist = ctl.run(state0, 0, 24, fail_at=19)
+        print(f"injected failure at step 19 -> restored from step 16, "
+              f"replayed to {last}")
+
+        diffs = [float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                 for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                                 jax.tree.leaves(got_state["params"]))]
+        print(f"max param divergence vs uninterrupted run: {max(diffs):.2e}")
+        print(f"loss at end: {float(hist[-1][1]['loss']):.4f} "
+              f"(ref {float(ref_hist[-1][1]['loss']):.4f})")
+        assert max(diffs) < 1e-6, "restart must be deterministic"
+        print("deterministic recovery: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Generate the EXPERIMENTS.md tables from dry-run JSON records.
+
+    python experiments/make_report.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(tag):
+    out = {}
+    for f in glob.glob(os.path.join(ROOT, "dryrun", tag, "*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | status | flops/dev | HBM bytes/dev | wire GB/dev | AG/AR/RS/A2A/CP GB | peak mem/dev | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {r['status']} | — | — | — | — | — | — |")
+            continue
+        c = r["collectives"]["per_op_bytes"]
+        gb = lambda k: f"{c.get(k, 0)/1e9:.1f}"
+        mem = r["memory"]
+        peak = max(mem.get("temp_bytes", 0) + mem.get("argument_bytes", 0),
+                   mem.get("peak_bytes", 0))
+        rows.append(
+            f"| {arch} | {shape} | ok | {r['flops_dev']:.2e} | "
+            f"{r['bytes_dev']:.2e} | "
+            f"{r['collectives']['wire_bytes']/1e9:.1f} | "
+            f"{gb('all-gather')}/{gb('all-reduce')}/{gb('reduce-scatter')}/"
+            f"{gb('all-to-all')}/{gb('collective-permute')} | "
+            f"{peak/1e9:.1f}GB | {r['compile_s']} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs, opt=None):
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | dominant | useful-FLOP ratio | mfu bound | vs optimized |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != "single":
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | {r.get('reason','skip')[:40]} |  |  |  |  |  |  |")
+            continue
+        rl = r["roofline"]
+        delta = ""
+        if opt:
+            o = opt.get((arch, shape, m))
+            if o and o["status"] == "ok":
+                b = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+                ov = max(o["roofline"]["compute_s"], o["roofline"]["memory_s"],
+                         o["roofline"]["collective_s"])
+                delta = f"{b/ov:.1f}x faster" if ov < b else "="
+        rows.append(
+            f"| {arch} | {shape} | {fmt_ms(rl['compute_s'])} | "
+            f"{fmt_ms(rl['memory_s'])} | {fmt_ms(rl['collective_s'])} | "
+            f"{rl['dominant']} | {r['useful_flop_ratio']:.3f} | "
+            f"{r['mfu_bound']:.3f} | {delta} |")
+    return "\n".join(rows)
+
+
+def main():
+    base = load("baseline")
+    opt = load("optimized")
+    print("## A. Dry-run records — single-pod (16x16 = 256 chips), baseline\n")
+    print(dryrun_table(base, "single"))
+    print("\n## B. Dry-run records — multi-pod (2x16x16 = 512 chips), baseline\n")
+    print(dryrun_table(base, "multi"))
+    print("\n## C. Roofline — baseline (paper-faithful), single-pod\n")
+    print(roofline_table(base, opt))
+    print("\n## D. Roofline — optimized (beyond-paper flags), single-pod\n")
+    print(roofline_table(opt))
+    print("\n## E. Dry-run records — optimized, multi-pod\n")
+    print(dryrun_table(opt, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Streaming-VMEM flash attention (Pallas TPU).
+
+The FlexiNS T2 discipline applied to compute: the working set (S x S score
+matrix) never materializes; residency is one (block_q x block_k) tile pair
+plus running (m, l, acc) statistics in VMEM scratch. Pallas double-buffers
+the HBM->VMEM streams, which is exactly the paper's "there is always an
+invalidated cacheline for the incoming packet" invariant.
+
+Layout: q (B, H, Sq, D); k/v (B, KVH, Sk, D). GQA is handled in the index
+maps (query head h reads kv head h // G) so KV is never repeated in HBM.
+Block shapes default to MXU-aligned (128, 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            sm_scale, causal, window, block_q, block_k, nk, cap):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (bq, D)
+        k = k_ref[0].astype(jnp.float32)              # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        kpos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    if causal or window:
+        # structural block skip: never schedule compute for fully-masked
+        # tiles (the §Perf 'triangular schedule')
+        live = jnp.bool_(True)
+        if causal:
+            live &= (kj * block_k) <= (qi * block_q + block_q - 1)
+        if window:
+            live &= (kj * block_k + block_k - 1) > (qi * block_q - window)
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, sm_scale=None,
+                    cap=0.0, block_q=128, block_k=128, interpret=False):
+    """q: (B,H,Sq,D); k/v: (B,KVH,Sk,D) -> (B,H,Sq,Dv)."""
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KVH
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * KVH, Sk, D)
+    vf = v.reshape(B * KVH, Sk, Dv)
+
+    def kv_index(bh, qi, kj):
+        b = bh // H
+        h = bh % H
+        return (b * KVH + h // G, kj, 0)
+
+    kernel = functools.partial(_kernel, sm_scale=sm_scale, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, nk=nk, cap=cap)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, Dv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dv),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, Dv)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash_attention kernel (same layout)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+NEG = -1e30
+
+
+def reference(q, k, v, *, causal=True, window=0, sm_scale=None, cap=0.0):
+    """q: (B,H,Sq,D); k/v: (B,KVH,Sk,D*) -> (B,H,Sq,Dv)."""
+    B, H, Sq, D = q.shape
+    KVH, Sk = k.shape[1], k.shape[2]
+    G = H // KVH
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * sm_scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhke->bhqe", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the kv_ingest kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.kv_ingest.kv_ingest import kv_ingest as _kernel
+from repro.kernels.kv_ingest import ref
+
+
+@partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def kv_ingest(pages, payload, page_ids, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(pages, payload, page_ids, interpret=interpret)
+
+
+reference = ref.reference

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for kv_ingest."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference(pages, payload, page_ids):
+    return pages.at[jnp.asarray(page_ids)].set(payload.astype(pages.dtype))

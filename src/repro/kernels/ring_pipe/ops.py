@@ -1,0 +1,19 @@
+"""Jit'd wrapper for ring_consume."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ring_pipe.ring_pipe import ring_consume as _kernel
+from repro.kernels.ring_pipe import ref
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ring_consume(slots, src_idx, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(slots, src_idx, interpret=interpret)
+
+
+reference = ref.reference

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for ring_consume."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference(slots, src_idx):
+    return jnp.take(slots, jnp.asarray(src_idx, jnp.int32), axis=0)

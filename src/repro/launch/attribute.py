@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Collective-byte attribution for one cell — the dry-run "profiler":
+#   PYTHONPATH=src python -m repro.launch.attribute --arch gemma-2b \
+#       --shape train_4k [--set seq_parallel=True]
+import argparse
+
+import jax
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model, input_specs
+from repro.parallel import sharding
+from repro.train import optimizer as optim
+from repro.train.train_loop import make_train_step
+from repro.utils import hlo_cost
+from repro import perf
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default="train_4k")
+    p.add_argument("--multi", action="store_true")
+    p.add_argument("--set", action="append", default=[])
+    args = p.parse_args()
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cur = getattr(perf.FLAGS, k)
+        if isinstance(cur, bool):
+            val = v.lower() in ("1", "true", "yes")
+        elif cur is None:
+            try:
+                val = float(v)
+            except ValueError:
+                val = v
+        else:
+            val = type(cur)(v)
+        perf.set_flags(**{k: val})
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi)
+    with sharding.use_mesh(mesh, fsdp=perf.FLAGS.fsdp):
+        model = build_model(cfg)
+        specs = model.param_specs()
+        params = sharding.abstract_with_shardings(specs, cfg.dtype)
+        ins = input_specs(cfg, shape)
+        if shape.kind == "train":
+            opt_cfg = optim.OptConfig()
+            opt = sharding.abstract_with_shardings(
+                optim.opt_state_specs(specs, opt_cfg), "float32")
+            step = make_train_step(model, cfg, opt_cfg)
+            compiled = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params, opt, dict(ins)).compile()
+        elif shape.kind == "prefill":
+            compiled = jax.jit(lambda p, b: model.prefill(
+                p, b["tokens"], embeddings=b.get("embeddings"))).lower(
+                params, ins).compile()
+        else:
+            compiled = jax.jit(model.decode_step, donate_argnums=(2,)).lower(
+                params, ins["tokens"], ins["cache"], ins["pos"]).compile()
+        for b, op, name in hlo_cost.attribute_collectives(compiled.as_text()):
+            print(f"{b/1e9:9.2f}GB {op:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --steps 100 \
+        --batch 4 --seq 128 [--mesh 2x2x2] [--reduced] [--ckpt-dir ckpt] \
+        [--fail-at 37]
+
+On the CPU rig use --reduced (family-preserving small config). The same
+driver drives the production mesh on real hardware (mesh axes from
+--mesh). Fault tolerance: checkpoint/restart via TrainController, with
+optional injected failure to exercise the recovery path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced as reduce_cfg
+from repro.launch.mesh import make_mesh
+from repro.models.registry import build_model
+from repro.parallel import sharding
+from repro.train import data as data_lib
+from repro.train import optimizer as optim
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import TrainController
+from repro.train.train_loop import make_train_step
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="gemma-2b")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--mesh", default="", help="e.g. 2x2x2 -> pod,data,model")
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--checkpoint-every", type=int, default=50)
+    p.add_argument("--fail-at", type=int, default=None)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+
+    ctx = None
+    if args.mesh:
+        dims = tuple(int(d) for d in args.mesh.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh(dims, axes)
+        ctx = sharding.use_mesh(mesh)
+        ctx.__enter__()
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = optim.OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1))
+    opt_state = optim.init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model, cfg, opt_cfg,
+                                      microbatches=args.microbatches))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch}x{args.seq}")
+
+    def controller_step(state, batch):
+        p, o, m = step_fn(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    def batch_fn(i):
+        return data_lib.synthetic_batch(i, args.batch, args.seq,
+                                        cfg.vocab_size)
+
+    state = {"params": params, "opt": opt_state}
+    if args.ckpt_dir:
+        ck = Checkpointer(args.ckpt_dir)
+        start = ck.latest_step() or 0
+        if start:
+            _, state = ck.restore(state)
+            print(f"resumed from step {start}")
+        ctrl = TrainController(controller_step, batch_fn, ck,
+                               checkpoint_every=args.checkpoint_every)
+        t0 = time.monotonic()
+        state, last, hist = ctrl.run(state, start, args.steps,
+                                     fail_at=args.fail_at)
+        for s, m in hist[::args.log_every]:
+            print(f"step {s}: loss={float(m['loss']):.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f}")
+        print(f"done at step {last}; {(time.monotonic()-t0)/max(1,len(hist)):.3f}"
+              f" s/step; stragglers flagged: {len(ctrl.monitor.flagged)}")
+    else:
+        t0 = time.monotonic()
+        for i in range(args.steps):
+            state, m = controller_step(state, batch_fn(i))
+            if i % args.log_every == 0:
+                print(f"step {i}: loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f}")
+        print(f"done; {(time.monotonic()-t0)/args.steps:.3f} s/step")
+    if ctx is not None:
+        ctx.__exit__(None, None, None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Attention: reference oracle, chunked (online-softmax) attention, and
+single-token decode partials.
+
+Layout conventions:
+  q: (B, S, KVH, G, Dk)   grouped query heads (G = n_heads // n_kv_heads)
+  k: (B, S, KVH, Dk)
+  v: (B, S, KVH, Dv)
+  out: (B, S, KVH, G, Dv)
+
+The chunked implementation is the CPU/XLA analogue of the FlexiNS T2
+"in-cache processing" discipline: O(chunk) resident state for an unbounded
+working set. The Pallas kernel (kernels/flash_attention) implements the
+same contract for real VMEM on TPU.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import softcap as apply_softcap
+
+NEG = -1e30
+
+
+def _mask(qpos, kpos, *, causal: bool, window: int):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                        q_offset=0, kv_valid=None, sm_scale=None):
+    """Oracle: materializes the full score matrix. Tests only."""
+    B, Sq, KVH, G, Dk = q.shape
+    Sk = k.shape[1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = apply_softcap(s, cap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    m = _mask(qpos, kpos, causal=causal, window=window)
+    if kv_valid is not None:
+        m &= kv_valid[None, :]
+    s = jnp.where(m[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhe->bqhge", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                      q_chunk=512, kv_chunk=1024, q_offset=0,
+                      block_skip=False, sm_scale=None):
+    """Online-softmax attention with O(chunk²) residency.
+
+    block_skip: skip fully-masked KV blocks (causal) by bounding the inner
+    scan length per q-chunk — the §Perf 'triangular schedule' optimization.
+    Baseline (False) computes every block and masks.
+    """
+    B, Sq, KVH, G, Dk = q.shape
+    Sk, Dv = k.shape[1], v.shape[-1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    while Sq % q_chunk:
+        q_chunk //= 2
+    while Sk % kv_chunk:
+        kv_chunk //= 2
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dk)
+
+    qc = jnp.moveaxis(q.reshape(B, nq, q_chunk, KVH, G, Dk), 1, 0)
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, KVH, Dk), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, KVH, Dv), 1, 0)
+
+    kiota = jnp.arange(kv_chunk)
+    qiota = jnp.arange(q_chunk)
+
+    def one_q_chunk(qi, q_i):
+        qpos = q_offset + qi * q_chunk + qiota
+
+        def kv_body(carry, inp):
+            acc, m, l = carry
+            kj, k_j, v_j = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            if cap:
+                s = apply_softcap(s, cap)
+            kpos = kj * kv_chunk + kiota
+            msk = _mask(qpos, kpos, causal=causal, window=window)
+            s = jnp.where(msk[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.where(msk[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhe->bhgqe", p, v_j.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KVH, G, q_chunk, Dv), jnp.float32)
+        m0 = jnp.full((B, KVH, G, q_chunk), NEG, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+
+        if block_skip and causal and not window:
+            # only kv blocks with kpos_start <= qpos_end participate
+            hi = jnp.minimum((q_offset + (qi + 1) * q_chunk + kv_chunk - 1)
+                             // kv_chunk, nk)
+
+            def fori_body(j, carry):
+                new_carry, _ = kv_body(carry, (j, kc[j], vc[j]))
+                return new_carry
+
+            acc, m, l = lax.fori_loop(0, hi, fori_body, (acc0, m0, l0))
+        else:
+            (acc, m, l), _ = lax.scan(kv_body, (acc0, m0, l0),
+                                      (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)                      # (B, q_chunk, KVH, G, Dv)
+
+    def q_body(_, inp):
+        qi, q_i = inp
+        return None, one_q_chunk(qi, q_i)
+
+    _, outs = lax.scan(q_body, None, (jnp.arange(nq), qc))  # (nq, B, C, KVH, G, Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KVH, G, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_partials(q, k, v, kv_positions, pos, *, cap=0.0, extra_mask=None,
+                    sm_scale=None):
+    """Single-token attention partial stats over one KV shard.
+
+    q: (B, KVH, G, Dk); k: (B, S_loc, KVH, Dk); v: (B, S_loc, KVH, Dv)
+    kv_positions: (S_loc,) or (B, S_loc) global slot positions;
+    pos: scalar or (B,) current position per request.
+    Returns acc (B,KVH,G,Dv) f32, m (B,KVH,G), l (B,KVH,G) for cross-shard
+    merge (parallel.collectives.merge_partials).
+    """
+    B = q.shape[0]
+    Dk = q.shape[-1]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dk)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = apply_softcap(s, cap)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    kvp = jnp.asarray(kv_positions)
+    if kvp.ndim == 1:
+        kvp = jnp.broadcast_to(kvp[None], (B, kvp.shape[0]))
+    valid = kvp <= pos_b[:, None]                       # (B, S_loc)
+    if extra_mask is not None:
+        em = jnp.asarray(extra_mask)
+        if em.ndim == 1:
+            em = jnp.broadcast_to(em[None], valid.shape)
+        valid &= em
+    valid = valid[:, None, None, :]                     # (B,1,1,S_loc)
+    s = jnp.where(valid, s, NEG)
+    m = s.max(axis=-1)
+    p = jnp.where(valid, jnp.exp(s - m[..., None]), 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgk,bkhe->bhge", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
+def finalize_partials(acc, l):
+    return acc / jnp.maximum(l[..., None], 1e-30)

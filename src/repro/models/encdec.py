@@ -1,0 +1,236 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+delivers precomputed frame embeddings (B, n_frames, d_model) — i.e. the
+output the two conv layers would produce. Positions are sinusoidal
+(whisper uses learned decoder positions; recorded deviation), norms are
+LayerNorm (whisper convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ffn
+from repro.models.attention import decode_partials, finalize_partials
+from repro.models.layers import (embed, embedding_spec, layernorm,
+                                 layernorm_spec, sinusoidal_positions,
+                                 unembed)
+from repro.models.module import Spec, init_params, stack_specs
+from repro.models.transformer import attn_spec, attn_cache_spec
+from repro.parallel import collectives, sharding
+
+
+def _proj(w, x):
+    y = jnp.einsum("bsd,dhk->bshk", x, w["w"])
+    if "b" in w:
+        y = y + w["b"].astype(y.dtype)
+    return y
+
+
+def _self_attention(params, x, cfg, *, causal, mode="train", cache=None,
+                    pos=None):
+    B, S, D = x.shape
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    G = H // KVH
+    hd = cfg.resolved_head_dim
+    q = _proj(params["wq"], x)
+    k = _proj(params["wk"], x)
+    v = _proj(params["wv"], x)
+    if mode in ("train", "prefill"):
+        out = collectives.attend(q.reshape(B, S, KVH, G, hd), k, v,
+                                 causal=causal)
+        y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, S, H, hd),
+                       params["wo"]["w"])
+        nc = None
+        if mode == "prefill":
+            nc = {"k": sharding.constrain(k, "batch", "kv_seq", None, None),
+                  "v": sharding.constrain(v, "batch", "kv_seq", None, None)}
+        return y, nc
+    q1 = q[:, 0].reshape(B, KVH, G, hd)
+    out, kc, vc = collectives.seqparallel_decode_attention(
+        q1, cache["k"], cache["v"], k[:, 0], v[:, 0], pos)
+    y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, 1, H, hd),
+                   params["wo"]["w"])
+    return y, {"k": kc, "v": vc}
+
+
+def _cross_attention(params, x, kv_or_cache, cfg, *, mode="train"):
+    """kv_or_cache: enc_out (train/prefill) or {'k','v'} cache (decode)."""
+    B, S, D = x.shape
+    H, KVH = cfg.n_heads, cfg.n_kv_heads
+    G = H // KVH
+    hd = cfg.resolved_head_dim
+    q = _proj(params["wq"], x)
+    if mode == "decode":
+        k, v = kv_or_cache["k"], kv_or_cache["v"]
+        F = k.shape[1]
+        q1 = q[:, 0].reshape(B, KVH, G, hd)
+        acc, m, l = decode_partials(q1, k, v, jnp.arange(F),
+                                    jnp.asarray(F, jnp.int32))
+        out = finalize_partials(acc, l).astype(x.dtype)
+        y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, 1, H, hd),
+                       params["wo"]["w"])
+        return y, None
+    enc_out = kv_or_cache
+    k = _proj(params["wk"], enc_out)
+    v = _proj(params["wv"], enc_out)
+    out = collectives.attend(q.reshape(B, S, KVH, G, hd), k, v, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, S, H, hd),
+                   params["wo"]["w"])
+    nc = {"k": k, "v": v} if mode == "prefill" else None
+    return y, nc
+
+
+def enc_block_spec(cfg) -> dict:
+    D = cfg.d_model
+    return {"ln1": layernorm_spec(D), "attn": attn_spec(cfg),
+            "ln2": layernorm_spec(D),
+            "ffn": ffn.ffn_spec(D, cfg.d_ff, "gelu", bias=True)}
+
+
+def dec_block_spec(cfg) -> dict:
+    D = cfg.d_model
+    return {"ln1": layernorm_spec(D), "attn": attn_spec(cfg),
+            "lnx": layernorm_spec(D), "xattn": attn_spec(cfg),
+            "ln2": layernorm_spec(D),
+            "ffn": ffn.ffn_spec(D, cfg.d_ff, "gelu", bias=True)}
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "enc": stack_specs(enc_block_spec(cfg), cfg.enc_layers),
+            "enc_ln": layernorm_spec(cfg.d_model),
+            "dec": stack_specs(dec_block_spec(cfg), cfg.n_layers),
+            "final_norm": layernorm_spec(cfg.d_model),
+        }
+
+    def cache_specs(self, batch: int, seq_len: int) -> list:
+        cfg = self.cfg
+        F = cfg.frontend.n_tokens
+        KVH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        per_layer = dict(attn_cache_spec(cfg, batch, seq_len))
+        per_layer["xk"] = Spec((batch, F, KVH, hd),
+                               ("batch", None, "kv_heads", "head_dim"),
+                               init="zeros")
+        per_layer["xv"] = Spec((batch, F, KVH, hd),
+                               ("batch", None, "kv_heads", "head_dim"),
+                               init="zeros")
+        return [stack_specs(per_layer, cfg.n_layers)]
+
+    def init(self, key, dtype=None):
+        return init_params(self.param_specs(), key, dtype or self.cfg.dtype)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return init_params(self.cache_specs(batch, seq_len),
+                           jax.random.PRNGKey(0), self.cfg.dtype)
+
+    # ------------------------------------------------------------------
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        B, F, D = frames.shape
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoidal_positions(jnp.arange(F), D).astype(x.dtype)
+        x = sharding.constrain(x, "batch", "seq", "embed")
+
+        def body(x, p):
+            h = layernorm(p["ln1"], x, cfg.norm_eps)
+            a, _ = _self_attention(p["attn"], h, cfg, causal=False)
+            x = x + a
+            h = layernorm(p["ln2"], x, cfg.norm_eps)
+            x = x + ffn.ffn_apply(p["ffn"], h, "gelu")
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return layernorm(params["enc_ln"], x, cfg.norm_eps)
+
+    def _dec_embed(self, params, tokens, positions):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+        return sharding.constrain(x, "batch", "seq", "embed")
+
+    def forward(self, params, tokens, *, embeddings):
+        """embeddings = frame embeddings (the stubbed conv frontend)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc_out = self._encode(params, embeddings)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._dec_embed(params, tokens, positions)
+
+        def body(x, p):
+            h = layernorm(p["ln1"], x, cfg.norm_eps)
+            a, _ = _self_attention(p["attn"], h, cfg, causal=True)
+            x = x + a
+            h = layernorm(p["lnx"], x, cfg.norm_eps)
+            a, _ = _cross_attention(p["xattn"], h, enc_out, cfg)
+            x = x + a
+            h = layernorm(p["ln2"], x, cfg.norm_eps)
+            x = x + ffn.ffn_apply(p["ffn"], h, "gelu")
+            return x, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        h = layernorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], h)
+        logits = sharding.constrain(logits, "batch", "seq", "vocab")
+        return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, tokens, *, embeddings):
+        cfg = self.cfg
+        B, S = tokens.shape
+        enc_out = self._encode(params, embeddings)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._dec_embed(params, tokens, positions)
+
+        def body(x, p):
+            h = layernorm(p["ln1"], x, cfg.norm_eps)
+            a, kv = _self_attention(p["attn"], h, cfg, causal=True,
+                                    mode="prefill")
+            x = x + a
+            h = layernorm(p["lnx"], x, cfg.norm_eps)
+            a, xkv = _cross_attention(p["xattn"], h, enc_out, cfg,
+                                      mode="prefill")
+            x = x + a
+            h = layernorm(p["ln2"], x, cfg.norm_eps)
+            x = x + ffn.ffn_apply(p["ffn"], h, "gelu")
+            return x, {"k": kv["k"], "v": kv["v"],
+                       "xk": xkv["k"], "xv": xkv["v"]}
+
+        x, caches = jax.lax.scan(body, x, params["dec"])
+        h = layernorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+        return unembed(params["embed"], h), [caches]
+
+    def decode_step(self, params, tokens, caches, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))[:, None]
+        x = self._dec_embed(params, tokens, positions)
+        cache = caches[0]
+
+        def body(carry, xs):
+            x = carry
+            p, c = xs
+            h = layernorm(p["ln1"], x, cfg.norm_eps)
+            a, kv = _self_attention(p["attn"], h, cfg, causal=True,
+                                    mode="decode", cache=c, pos=pos)
+            x = x + a
+            h = layernorm(p["lnx"], x, cfg.norm_eps)
+            a, _ = _cross_attention(p["xattn"], h, {"k": c["xk"], "v": c["xv"]},
+                                    cfg, mode="decode")
+            x = x + a
+            h = layernorm(p["ln2"], x, cfg.norm_eps)
+            x = x + ffn.ffn_apply(p["ffn"], h, "gelu")
+            return x, {"k": kv["k"], "v": kv["v"], "xk": c["xk"],
+                       "xv": c["xv"]}
+
+        x, caches = jax.lax.scan(body, x, (params["dec"], cache))
+        h = layernorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params["embed"], h)
+        return logits, [caches]

@@ -1,0 +1,138 @@
+"""Shared layers: norms, linear/einsum projections, embeddings, RoPE, acts."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import Spec
+
+
+# --------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# --------------------------------------------------------------------------
+def rmsnorm_spec(dim: int) -> dict:
+    return {"scale": Spec((dim,), (None,), init="ones", dtype="float32")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5, *, zero_centered: bool = False):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = params["scale"]
+    if zero_centered:          # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(dt)
+
+
+def layernorm_spec(dim: int) -> dict:
+    return {"scale": Spec((dim,), (None,), init="ones", dtype="float32"),
+            "bias": Spec((dim,), (None,), init="zeros", dtype="float32")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Linear / einsum projections
+# --------------------------------------------------------------------------
+def linear_spec(d_in: int, d_out: int, axes=("embed", "mlp"), *, bias: bool = False,
+                scale: Optional[float] = None) -> dict:
+    s = {"w": Spec((d_in, d_out), axes, scale=scale)}
+    if bias:
+        s["b"] = Spec((d_out,), (axes[1],), init="zeros")
+    return s
+
+
+def linear(params, x):
+    y = jnp.einsum("...i,io->...o", x, params["w"])
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def proj_spec(shape: tuple, axes: tuple, *, bias_dims: Optional[tuple] = None,
+              scale: Optional[float] = None) -> dict:
+    """General einsum weight, e.g. (d_model, heads, head_dim)."""
+    s = {"w": Spec(shape, axes, scale=scale)}
+    if bias_dims is not None:
+        s["b"] = Spec(tuple(shape[i] for i in bias_dims),
+                      tuple(axes[i] for i in bias_dims), init="zeros")
+    return s
+
+
+# --------------------------------------------------------------------------
+# Embedding
+# --------------------------------------------------------------------------
+def embedding_spec(vocab: int, dim: int) -> dict:
+    return {"table": Spec((vocab, dim), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits via the (possibly tied) embedding table."""
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+def act_fn(name: str):
+    return {
+        "swiglu": jax.nn.silu,
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (d/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, d/2)
+    if x.ndim == angles.ndim + 1:                            # (..., S, H, D)
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Sinusoidal absolute positions (whisper)
+# --------------------------------------------------------------------------
+def sinusoidal_positions(positions, dim: int) -> jnp.ndarray:
+    """positions: (...,) int -> (..., dim) f32 sinusoid embedding."""
+    half = dim // 2
+    inv = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                  * (math.log(10000.0) / max(1, half - 1)))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,106 @@
+"""Minimal functional module system.
+
+Params are nested dicts of arrays. Each layer contributes a *spec tree*
+(nested dicts with ``Spec`` leaves) describing shape, logical sharding axes
+and initializer; from the spec tree we derive
+  * real initialized params           (init_params)
+  * ShapeDtypeStruct stand-ins        (abstract_params — used by the dry-run,
+                                       never allocates)
+  * NamedShardings                    (parallel.sharding.param_shardings)
+
+Logical axis names are resolved to mesh axes by ``parallel.sharding`` rules,
+with automatic divisibility fallback (a dim that doesn't divide by the mesh
+axis size stays replicated).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"            # normal | zeros | ones
+    scale: Optional[float] = None   # stddev; None => 1/sqrt(fan_in)
+    dtype: Optional[str] = None     # None => model default dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def tree_map_specs(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int):
+    """Prepend a scanned 'layers' dimension to every leaf (for lax.scan)."""
+    return tree_map_specs(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape,
+                                      axes=("layers",) + s.axes),
+        specs)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # weight layout convention: (..., in, out) or (in, heads, head_dim) etc.
+    # use the first non-stacked input-like dim: product of all but last dim
+    # is too aggressive for (in, heads, hd); use shape[-2] unless the array
+    # is (in, h, hd) — callers set scale explicitly where it matters.
+    return shape[-2]
+
+
+def _init_leaf(spec: Spec, key, default_dtype: str):
+    dt = jnp.dtype(spec.dtype or default_dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "normal":
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(
+            max(1, _fan_in(spec.shape)))
+        v = jax.random.normal(key, spec.shape, jnp.float32) * std
+        return v.astype(dt)
+    if spec.init == "a_log":
+        # mamba2 A_log: log(U[1, 16])
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if spec.init == "rglru_a":
+        # griffin Λ: a = sigmoid(Λ) with a^c roughly in [0.9, 0.999], c = 8
+        u = jax.random.uniform(key, spec.shape, jnp.float32,
+                               0.9 ** (1 / 8), 0.999 ** (1 / 8))
+        return jnp.log(u / (1.0 - u)).astype(dt)
+    raise ValueError(f"unknown init '{spec.init}'")
+
+
+def init_params(specs, key, default_dtype: str = "float32"):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    vals = [_init_leaf(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs, default_dtype: str = "float32"):
+    """ShapeDtypeStruct tree — the dry-run's no-allocation stand-in."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        specs)
+
+
+def count_params(specs, predicate=None) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(specs, is_leaf=is_spec):
+        if predicate is None or predicate(leaf):
+            total += int(np.prod(leaf.shape))
+    return total

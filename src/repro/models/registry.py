@@ -1,0 +1,66 @@
+"""Model registry: config -> model, parameter accounting, dry-run input specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import module as mod
+from repro.parallel import sharding
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    from repro.models.transformer import DecoderLM
+    return DecoderLM(cfg)
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    model = build_model(cfg)
+    specs = model.param_specs()
+    total = 0
+    for leaf in jax.tree.leaves(specs, is_leaf=mod.is_spec):
+        n = int(np.prod(leaf.shape))
+        if active_only and "expert" in leaf.axes:
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every step-function input (weak-type
+    correct, shardable, zero allocation). Shardings attach when a mesh
+    context is active."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    act_dt = jnp.dtype(cfg.dtype)
+
+    def sds(shp, dt, axes=None):
+        sh = sharding.act_sharding(axes, shp) if axes else None
+        if sh is not None:
+            return jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    model = build_model(cfg)
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": sds((B, S), tok, ("batch", "seq")),
+                 "labels": sds((B, S), tok, ("batch", "seq"))}
+        if cfg.frontend.kind != "none":
+            F = cfg.frontend.n_tokens
+            specs["embeddings"] = sds((B, F, cfg.frontend.d_input), act_dt,
+                                      ("batch", "seq", "embed"))
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+
+    # decode: one new token against a cache of seq_len
+    cache_specs = model.cache_specs(B, S)
+    cache = sharding.abstract_with_shardings(cache_specs, cfg.dtype)
+    return {
+        "tokens": sds((B, 1), tok, ("batch", "seq")),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

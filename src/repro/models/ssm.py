@@ -1,0 +1,236 @@
+"""Mamba-2 block: SSD (state-space duality) chunked scan + O(1) decode.
+
+Discrete SSD recurrence per head h (state S ∈ R^{N x P}):
+    a_t = exp(dt_t * A_h)                               (scalar decay)
+    S_t = a_t * S_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · S_t + D_h * x_t
+
+The chunked train/prefill path computes the intra-chunk term as a masked
+quadratic form (the "duality" with attention) and carries inter-chunk
+states through a lax.scan — the same bounded-residency streaming
+discipline as FlexiNS T2 (the resident set is one chunk + one state,
+independent of sequence length). [arXiv:2405.21060]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.module import Spec
+from repro.parallel import sharding
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.n_groups, s.d_state, s.head_dim
+
+
+def mamba2_spec(cfg) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, G, N, P = dims(cfg)
+    K = s.d_conv
+    return {
+        "in_z": Spec((D, d_inner), ("embed", "ssm_inner")),
+        "in_x": Spec((D, d_inner), ("embed", "ssm_inner")),
+        "in_B": Spec((D, G * N), ("embed", None)),
+        "in_C": Spec((D, G * N), ("embed", None)),
+        "in_dt": Spec((D, H), ("embed", "ssm_heads")),
+        "conv_x": Spec((K, d_inner), ("conv", "ssm_inner")),
+        "conv_x_b": Spec((d_inner,), ("ssm_inner",), init="zeros"),
+        "conv_B": Spec((K, G * N), ("conv", None)),
+        "conv_B_b": Spec((G * N,), (None,), init="zeros"),
+        "conv_C": Spec((K, G * N), ("conv", None)),
+        "conv_C_b": Spec((G * N,), (None,), init="zeros"),
+        "A_log": Spec((H,), ("ssm_heads",), init="a_log", dtype="float32"),
+        "dt_bias": Spec((H,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "D": Spec((H,), ("ssm_heads",), init="ones", dtype="float32"),
+        "norm": rmsnorm_spec(d_inner),
+        "out": Spec((d_inner, D), ("ssm_inner", "embed")),
+    }
+
+
+def _dconv(x, w, b):
+    """Depthwise causal conv. x: (B,S,F); w: (K,F)."""
+    K = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, j:j + S] * w[j] for j in range(K))
+    return y + b.astype(y.dtype)
+
+
+def _proj_inputs(params, x, cfg):
+    z = jnp.einsum("bsd,di->bsi", x, params["in_z"])
+    xc = jnp.einsum("bsd,di->bsi", x, params["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, params["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, params["in_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_dt"]).astype(jnp.float32)
+    return z, xc, Bm, Cm, dt
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, Dp, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P); dt: (B,S,H) f32 (post-softplus); A: (H,) f32 (negative);
+    Bm/Cm: (B,S,G,N); Dp: (H,) skip. Returns (y (B,S,H,P), final_state
+    (B,H,N,P) f32).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    xf = xh.astype(jnp.float32).reshape(B, nc, Q, H, P)
+    dtc = dt.reshape(B, nc, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(B, nc, Q, G, N)
+    Cc = Cm.astype(jnp.float32).reshape(B, nc, Q, G, N)
+
+    l = dtc * A                                      # (B,nc,Q,H) log decay
+    cs = jnp.cumsum(l, axis=2)                       # inclusive cumsum
+    total = cs[:, :, -1]                             # (B,nc,H)
+
+    # intra-chunk quadratic term (masked "attention" duality)
+    CB = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)    # (B,nc,G,Q,Q)
+    CB = jnp.repeat(CB, rep, axis=2)                 # (B,nc,H,Q,Q)
+    # seg[b,c,h,i,j] = cs_i - cs_j, masked to -inf-ish BEFORE exp so the
+    # upper triangle can't overflow (and grads through `where` stay clean)
+    csh = jnp.moveaxis(cs, 2, 3)                     # (B,nc,H,Q)
+    seg = csh[..., :, None] - csh[..., None, :]      # (B,nc,H,Q,Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(mask, seg, -1e30)
+    M = CB * jnp.exp(seg)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", M, dtc, xf)
+
+    # chunk summary states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    w = jnp.exp(total[:, :, None] - cs) * dtc        # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                 # (B,nc,Q,H,N)
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", w, Bh, xf)
+
+    def body(carry, inp):
+        prev = carry                                 # (B,H,N,P)
+        st, tot, Cq, csq = inp
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp",
+                             jnp.repeat(Cq, rep, axis=2) *
+                             jnp.exp(csq)[..., None], prev)
+        new = jnp.exp(tot)[..., None, None] * prev + st
+        return new, y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(cs, 1, 0))
+    final, y_inter = lax.scan(body, h0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)            # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P) \
+        + Dp[None, None, :, None] * xh.astype(jnp.float32)
+    return y.astype(xh.dtype), final
+
+
+def mamba2_forward(params, x, cfg, *, return_cache: bool = False,
+                   initial_cache=None):
+    """Full-sequence mamba2 mixer. x: (B,S,D) -> (B,S,D) [, cache]."""
+    s = cfg.ssm
+    d_inner, H, G, N, P = dims(cfg)
+    B, S, D = x.shape
+    z, xc, Bm, Cm, dt = _proj_inputs(params, x, cfg)
+    xc_raw, Bm_raw, Cm_raw = xc, Bm, Cm
+
+    if initial_cache is not None:
+        raise NotImplementedError("chunk-continuation prefill not needed")
+
+    xc = jax.nn.silu(_dconv(xc, params["conv_x"], params["conv_x_b"]))
+    Bm = jax.nn.silu(_dconv(Bm, params["conv_B"], params["conv_B_b"]))
+    Cm = jax.nn.silu(_dconv(Cm, params["conv_C"], params["conv_C_b"]))
+
+    xc = sharding.constrain(xc, "batch", "seq", "ssm_inner")
+    dtp = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    xh = xc.reshape(B, S, H, P)
+    y, final = ssd_chunked(xh, dtp, A,
+                           Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N),
+                           params["D"], s.chunk_size)
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(params["norm"], (y * jax.nn.silu(z)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["out"])
+    if not return_cache:
+        return out
+    K = s.d_conv
+    # conv caches hold the last K-1 *pre-conv* channel values
+    assert S >= K - 1, "prefill shorter than conv receptive field"
+    tail = lambda t: t[:, -(K - 1):].astype(jnp.float32)
+    cache = {
+        "state": final,                                   # (B,H,N,P) f32
+        "conv_x": tail(xc_raw),
+        "conv_B": tail(Bm_raw),
+        "conv_C": tail(Cm_raw),
+    }
+    return out, cache
+
+
+def mamba2_decode(params, x, cache, cfg):
+    """Single-token step. x: (B,1,D); cache from mamba2_cache_spec."""
+    s = cfg.ssm
+    d_inner, H, G, N, P = dims(cfg)
+    B = x.shape[0]
+    K = s.d_conv
+    z, xc, Bm, Cm, dt = _proj_inputs(params, x, cfg)
+
+    def step_conv(cache_k, new, w, b):
+        hist = jnp.concatenate([cache_k, new], axis=1)        # (B,K,F)
+        y = jnp.einsum("bkf,kf->bf", hist, w) + b
+        return jax.nn.silu(y)[:, None], hist[:, 1:]
+
+    xc1, conv_x = step_conv(cache["conv_x"], xc, params["conv_x"],
+                            params["conv_x_b"])
+    Bm1, conv_B = step_conv(cache["conv_B"], Bm, params["conv_B"],
+                            params["conv_B_b"])
+    Cm1, conv_C = step_conv(cache["conv_C"], Cm, params["conv_C"],
+                            params["conv_C_b"])
+
+    dtp = jax.nn.softplus(dt[:, 0] + params["dt_bias"])       # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dtp * A)                                      # (B,H)
+    xh = xc1[:, 0].astype(jnp.float32).reshape(B, H, P)
+    Bv = Bm1[:, 0].astype(jnp.float32).reshape(B, G, N)
+    Cv = Cm1[:, 0].astype(jnp.float32).reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bv, rep, axis=1)                          # (B,H,N)
+    Ch = jnp.repeat(Cv, rep, axis=1)
+    state = cache["state"]
+    state = a[..., None, None] * state \
+        + (dtp[..., None] * Bh)[..., :, None] * xh[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) \
+        + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], (y * jax.nn.silu(z)).astype(x.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["out"])
+    new_cache = {"state": state, "conv_x": conv_x, "conv_B": conv_B,
+                 "conv_C": conv_C}
+    return out, new_cache
+
+
+def mamba2_cache_spec(cfg, batch: int) -> dict:
+    s = cfg.ssm
+    d_inner, H, G, N, P = dims(cfg)
+    K = s.d_conv
+    return {
+        "state": Spec((batch, H, N, P), ("batch", "ssm_heads", None, None),
+                      init="zeros", dtype="float32"),
+        "conv_x": Spec((batch, K - 1, d_inner), ("batch", None, "ssm_inner"),
+                       init="zeros", dtype="float32"),
+        "conv_B": Spec((batch, K - 1, G * N), ("batch", None, None),
+                       init="zeros", dtype="float32"),
+        "conv_C": Spec((batch, K - 1, G * N), ("batch", None, None),
+                       init="zeros", dtype="float32"),
+    }

@@ -1,0 +1,198 @@
+"""Logical-axis sharding: rules tables, mesh context, constraint helpers.
+
+Two rule tables (they intentionally differ — FSDP shards *parameters* over
+the data axis, while *activations* shard their batch over it):
+
+  param rules:  logical param axis -> mesh axis (or None)
+  act rules:    logical activation axis -> mesh axis / tuple of axes
+
+Resolution drops mesh axes that are absent from the active mesh and falls
+back to replication when the dim size does not divide the mesh axis size
+(this is what lets e.g. kv_heads=8 stay replicated on a model=16 mesh, or
+an odd vocab stay unsharded, without per-arch special cases).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import module as mod
+
+
+def make_param_rules(fsdp: bool = True) -> dict:
+    from repro.perf import FLAGS
+    ep = ("model", "data") if FLAGS.ep_over_data else "model"
+    return {
+        "layers": None,
+        "vocab": "model",
+        "embed": "data" if fsdp else None,   # ZeRO-3 style: shard params on data
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": ep,                        # EP (optionally over both axes)
+        "expert_mlp": ("data" if fsdp and not FLAGS.ep_over_data else None),
+        "q_lora": None,
+        "kv_lora": None,
+        "rnn": "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "state": None,
+        "conv": None,
+        None: None,
+    }
+
+
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",      # decode-time KV cache sequence sharding
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "rnn": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "state": None,
+    "window": None,
+    None: None,
+}
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh
+    param_rules: dict
+    act_rules: dict
+
+
+_CTX: contextvars.ContextVar[Optional[MeshContext]] = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, *, fsdp: bool = True, param_rules: dict | None = None,
+             act_rules: dict | None = None):
+    ctx = MeshContext(mesh, param_rules or make_param_rules(fsdp),
+                      act_rules or dict(ACT_RULES))
+    token = _CTX.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _CTX.reset(token)
+
+
+def current() -> Optional[MeshContext]:
+    return _CTX.get()
+
+
+def mesh_axis_size(name: str) -> int:
+    ctx = current()
+    if ctx is None or name not in ctx.mesh.axis_names:
+        return 1
+    return ctx.mesh.shape[name]
+
+
+# --------------------------------------------------------------------------
+# Resolution
+# --------------------------------------------------------------------------
+def _resolve_dim(logical, dim_size: int, rules: dict, mesh: Mesh):
+    """logical axis name -> mesh axis entry for a PartitionSpec, or None."""
+    want = rules.get(logical, None)
+    if want is None:
+        return None
+    if isinstance(want, str):
+        want = (want,)
+    # keep the maximal prefix of available axes whose product divides dim
+    kept = []
+    prod = 1
+    for ax in want:
+        if ax not in mesh.axis_names:
+            continue
+        n = mesh.shape[ax]
+        if dim_size % (prod * n) != 0:
+            break
+        kept.append(ax)
+        prod *= n
+    if not kept:
+        return None
+    return tuple(kept) if len(kept) > 1 else kept[0]
+
+
+def resolve_spec(axes, shape, table: str = "param") -> P:
+    ctx = current()
+    if ctx is None:
+        return P()
+    rules = ctx.param_rules if table == "param" else ctx.act_rules
+    used: set[str] = set()
+    entries = []
+    for logical, dim in zip(axes, shape):
+        ent = _resolve_dim(logical, dim, rules, ctx.mesh)
+        # a mesh axis may appear at most once in a PartitionSpec
+        if ent is not None:
+            flat = (ent,) if isinstance(ent, str) else ent
+            if any(a in used for a in flat):
+                ent = None
+            else:
+                used.update(flat)
+        entries.append(ent)
+    return P(*entries)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical activation axes; no-op w/o mesh."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = resolve_spec(axes, x.shape, table="act")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def act_sharding(axes, shape) -> Optional[NamedSharding]:
+    ctx = current()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, resolve_spec(axes, shape, table="act"))
+
+
+def param_shardings(specs):
+    """Spec tree -> NamedSharding tree (None tree if no active mesh)."""
+    ctx = current()
+    if ctx is None:
+        return jax.tree.map(lambda s: None, specs, is_leaf=mod.is_spec)
+    return mod.tree_map_specs(
+        lambda s: NamedSharding(ctx.mesh, resolve_spec(s.axes, s.shape, "param")),
+        specs)
+
+
+def abstract_with_shardings(specs, default_dtype: str):
+    """(ShapeDtypeStruct tree with .sharding set) for dry-run lowering."""
+    ctx = current()
+    ab = mod.abstract_params(specs, default_dtype)
+    if ctx is None:
+        return ab
+    sh = param_shardings(specs)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), ab, sh)
+
+
+def batch_axes_prefix(dim_size: int) -> tuple[str, ...]:
+    """Mesh axes the batch actually shards over (for shard_map in_specs)."""
+    ctx = current()
+    if ctx is None:
+        return ()
+    ent = _resolve_dim("batch", dim_size, ctx.act_rules, ctx.mesh)
+    if ent is None:
+        return ()
+    return (ent,) if isinstance(ent, str) else tuple(ent)

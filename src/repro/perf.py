@@ -1,0 +1,51 @@
+"""Global performance knobs — the §Perf hillclimb surface.
+
+The dry-run driver mutates FLAGS between lowerings so each hypothesis ->
+change -> re-lower iteration is a one-flag diff (EXPERIMENTS.md §Perf
+records the trajectory).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass
+class PerfFlags:
+    # attention streaming
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    block_skip: bool = False          # triangular causal schedule
+    # MoE dispatch: 'a2a' (FlexiNS direct) | 'replicated' (staged baseline)
+    moe_impl: str = "a2a"
+    capacity_factor: float | None = None   # override MoEConfig.capacity_factor
+    # params/optimizer sharding
+    fsdp: bool = True
+    # remat: 'nothing' (recompute all) | 'dots' (save matmul outputs)
+    remat_policy: str = "nothing"
+    # decode cache layout: 'seq' (KV-sequence parallel) only for now
+    decode_layout: str = "seq"
+    # microbatch count for the train step (grad-accumulation overlap)
+    microbatches: int = 1
+    # Megatron-style sequence parallelism of the residual stream: kills the
+    # per-layer layout flapping (AG) between CP attention / MoE SP regions
+    # and the replicated FFN, and turns down-proj ARs into RSs
+    seq_parallel: bool = False
+    # shard the expert dim over ('model','data') — EP=256: expert weights
+    # fully sharded (no FSDP AG on them, no cross-data grad AR)
+    ep_over_data: bool = False
+
+
+FLAGS = PerfFlags()
+
+
+def set_flags(**kw) -> PerfFlags:
+    global FLAGS
+    FLAGS = dataclasses.replace(FLAGS, **kw)
+    return FLAGS
+
+
+def reset_flags() -> PerfFlags:
+    global FLAGS
+    FLAGS = PerfFlags()
+    return FLAGS

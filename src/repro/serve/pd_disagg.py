@@ -1,0 +1,94 @@
+"""Prefill/decode disaggregation (paper §5.7 KVCache-transfer workload).
+
+A prefill engine produces KV caches; the KVTransferEngine ships them over
+the `pod` mesh axis (striped / "sprayed"); the decode engine ingests them
+into its paged pool and serves decode steps. On the CPU test rig the pod
+axis degenerates to identity transfer, but every API, layout and
+descriptor path is the production one — the multi-pod dry-run lowers the
+same `make_transfer_step` on the (2,16,16) mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptors import TransferPlan
+from repro.core.kvtransfer import KVTransferEngine
+from repro.serve.kvcache import PagedKVPool, pad_caches
+
+
+class PDServer:
+    def __init__(self, model, params, *, max_seq: int = 128,
+                 page_tokens: int = 16, quantize_bits: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_seq = max_seq
+        self.page_tokens = page_tokens
+        self.plan = TransferPlan(quantize_bits=quantize_bits)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    # -- prefill pod ----------------------------------------------------
+    def prefill(self, prompts: np.ndarray):
+        """prompts: (B, P). Returns (first_tokens, caches, prefill_len)."""
+        logits, caches = self._prefill(self.params, jnp.asarray(prompts))
+        first = jnp.argmax(logits[:, -1], axis=-1)
+        return first, caches, prompts.shape[1]
+
+    # -- the wire ---------------------------------------------------------
+    def transfer(self, caches, batch: int, seq_len: int, staged=False):
+        eng = KVTransferEngine(self.model, batch, seq_len, self.plan)
+        fn = eng.transfer_staged if staged else eng.transfer
+        return fn(caches), eng.stats
+
+    # -- decode pod (with paged ingest) ----------------------------------
+    def ingest_and_decode(self, caches, first_tokens, prefill_len: int,
+                          n_steps: int = 8, use_kernel: bool = False):
+        """Ingest transferred caches through the paged pool (T2), gather
+        back to the decode layout, then run greedy decode steps."""
+        caches = pad_caches(caches, prefill_len, self.max_seq)
+        caches = self._page_roundtrip(caches, use_kernel=use_kernel)
+        B = first_tokens.shape[0]
+        toks = jnp.asarray(first_tokens)[:, None].astype(jnp.int32)
+        out = [np.asarray(toks[:, 0])]
+        pos = jnp.full((B,), prefill_len, jnp.int32)
+        for _ in range(n_steps):
+            logits, caches = self._decode(self.params, toks, caches, pos)
+            toks = jnp.argmax(logits[:, :1], axis=-1).astype(jnp.int32)
+            if toks.ndim == 1:
+                toks = toks[:, None]
+            out.append(np.asarray(toks[:, 0]))
+            pos = pos + 1
+        return np.stack(out, 1)
+
+    def _page_roundtrip(self, caches, use_kernel: bool):
+        """Every seq-indexed cache leaf takes the paged ingest+gather path."""
+        def one(a):
+            if a.ndim < 3 or a.shape[2] != self.max_seq:
+                return a                    # state/window caches pass through
+            lead = a.shape[:2]              # (L, B)
+            flat = a.reshape((-1, self.max_seq) + a.shape[3:])
+            outs = []
+            for row in range(flat.shape[0]):
+                kv = flat[row]
+                pool = PagedKVPool(
+                    n_pages=-(-self.max_seq // self.page_tokens),
+                    page_tokens=self.page_tokens,
+                    feature_shape=kv.shape[1:], dtype=kv.dtype)
+                alloc = pool.allocate(self.max_seq)
+                pool.ingest(alloc, kv, use_kernel=use_kernel)
+                outs.append(pool.gather(alloc, self.max_seq))
+            return jnp.stack(outs).reshape(lead + (self.max_seq,) + a.shape[3:])
+        return jax.tree.map(one, caches)
+
+    # -- end to end -------------------------------------------------------
+    def serve(self, prompts: np.ndarray, n_steps: int = 8, staged=False,
+              use_kernel: bool = False):
+        first, caches, plen = self.prefill(prompts)
+        caches, stats = self.transfer(caches, prompts.shape[0], plen,
+                                      staged=staged)
+        toks = self.ingest_and_decode(caches, first, plen, n_steps,
+                                      use_kernel=use_kernel)
+        return toks, stats

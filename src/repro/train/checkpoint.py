@@ -1,0 +1,128 @@
+"""Checkpointing: sharded-tree save/restore, async writes, elastic reshard.
+
+Format: <dir>/step_<n>/
+    tensors.npz      flattened keypath -> ndarray
+    meta.json        {step, keys, metadata}
+
+Restore takes a *template* tree (abstract params from the model specs) and
+re-fills it by keypath, then device_puts with the CURRENT mesh's shardings —
+so a checkpoint written on one mesh restores onto any other (elastic
+resharding: change DP width / pod count between runs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+from repro.models import module as mod
+from repro.parallel import sharding
+
+
+def _keystr(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def flatten_with_keys(tree) -> dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[_keystr(path)] = np.asarray(leaf)
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_write else None
+        self._pending = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ------------------------------------------------------------
+    def save(self, step: int, state: dict, metadata: dict | None = None):
+        """state: arbitrary pytree dict, e.g. {'params':…, 'opt':…}."""
+        flat = flatten_with_keys(state)        # host copies happen here
+        if self._pool is not None:
+            self.wait()
+            self._pending = self._pool.submit(self._write, step, flat,
+                                              metadata or {})
+        else:
+            self._write(step, flat, metadata or {})
+
+    def _write(self, step: int, flat: dict, metadata: dict):
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = d + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "tensors.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "keys": sorted(flat),
+                       "metadata": metadata}, f)
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(tmp, d)                       # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -- read -------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                spec_tree=None) -> tuple[int, dict]:
+        """template: pytree with array-like leaves (shapes may be abstract).
+        spec_tree: optional module.Spec tree — when given and a mesh context
+        is active, leaves are device_put with the resolved NamedShardings
+        (elastic reshard onto the current mesh)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        data = np.load(os.path.join(d, "tensors.npz"))
+
+        shardings = None
+        if spec_tree is not None and sharding.current() is not None:
+            shardings = sharding.param_shardings(spec_tree)
+            flat_sh = {_keystr(p): s for p, s in
+                       jax.tree_util.tree_flatten_with_path(shardings)[0]}
+        leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+        out_leaves = []
+        for path, leaf in leaves_with_path[0]:
+            k = _keystr(path)
+            arr = data[k]
+            if shardings is not None and k in flat_sh and flat_sh[k] is not None:
+                arr = jax.device_put(arr, flat_sh[k])
+            out_leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(leaves_with_path[1], out_leaves)
+        return step, tree

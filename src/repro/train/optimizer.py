@@ -1,0 +1,95 @@
+"""AdamW in pure JAX (no optax), with spec-derived sharded optimizer state.
+
+Moments inherit each parameter's logical sharding axes, so ZeRO-style
+param sharding (parallel.sharding FSDP rules) automatically shards the
+optimizer state too. ``moment_dtype='bfloat16'`` halves optimizer memory
+for the 671B config (recorded in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import module as mod
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+def opt_state_specs(param_specs, opt_cfg: OptConfig) -> dict:
+    """Spec tree for (m, v) with the same logical axes as the params."""
+    def moment(s):
+        return dataclasses.replace(s, init="zeros", dtype=opt_cfg.moment_dtype)
+    return {
+        "m": mod.tree_map_specs(moment, param_specs),
+        "v": mod.tree_map_specs(moment, param_specs),
+        "step": mod.Spec((), (), init="zeros", dtype="int32"),
+    }
+
+
+def init_opt_state(params, opt_cfg: OptConfig):
+    dt = jnp.dtype(opt_cfg.moment_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(step, opt_cfg: OptConfig):
+    # step counts from 1 after the first update: lr ramps 1/w, 2/w, ..., 1
+    warm = jnp.minimum(1.0, step / max(1, opt_cfg.warmup_steps))
+    return opt_cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(grads, opt_state, params, opt_cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-12)) \
+        if opt_cfg.grad_clip else 1.0
+    lr = _schedule(step, opt_cfg)
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(opt_cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt_cfg.eps)
+        if opt_cfg.weight_decay:
+            delta = delta + opt_cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,99 @@
+"""Parse compiled HLO text for collective traffic (the dry-run 'profile').
+
+cost_analysis() gives per-device FLOPs and HBM bytes but NOT collective
+bytes, so we sum result-shape bytes of every collective op and convert to
+per-device wire bytes with the standard ring-algorithm factors:
+
+    all-gather          out * (N-1)/N
+    all-reduce          2 * out * (N-1)/N          (RS + AG)
+    reduce-scatter      out * (N-1)                (operand = out * N)
+    all-to-all          out * (N-1)/N
+    collective-permute  out
+
+N is parsed from replica_groups (iota `[G,N]<=[...]` or explicit `{{...}}`).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*?)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _result_bytes(line: str, op: str) -> int:
+    """Sum every type[dims] on the LHS (handles tuple results)."""
+    lhs = line.split(f" {op}(")[0]
+    # result types appear after '=' and before the op name
+    if "=" in lhs:
+        lhs = lhs.split("=", 1)[1]
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(lhs):
+        if dtype in DTYPE_BYTES:
+            total += _shape_bytes(dtype, dims)
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {'wire_bytes': per-device bytes, 'per_op': {...}, 'counts'}."""
+    per_op_bytes: dict[str, float] = defaultdict(float)
+    per_op_count: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for op in COLL_OPS:
+            # match the op as the instruction, not as a substring of a name
+            if f" {op}(" not in ls or "-start(" in ls:
+                continue
+            if f"{op}-done" in ls:
+                continue
+            out = _result_bytes(ls, op)
+            if out == 0:
+                continue
+            n = _group_size(ls)
+            if op == "all-gather":
+                wire = out * (n - 1) / n
+            elif op == "all-reduce":
+                wire = 2 * out * (n - 1) / n
+            elif op == "reduce-scatter":
+                wire = out * (n - 1)
+            elif op == "all-to-all":
+                wire = out * (n - 1) / n
+            else:                      # collective-permute
+                wire = out
+            per_op_bytes[op] += wire
+            per_op_count[op] += 1
+            break
+    return {
+        "wire_bytes": float(sum(per_op_bytes.values())),
+        "per_op_bytes": dict(per_op_bytes),
+        "counts": dict(per_op_count),
+    }

@@ -1,0 +1,68 @@
+"""Roofline terms from the dry-run's compiled artifact (TPU v5e-class).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / ICI_link_bw
+
+cost_analysis() is already per-device on an SPMD-partitioned module, so
+"/ chips" in the brief's formulas is implicit. MODEL_FLOPS uses 6·N_active·D
+(train), 2·N_active·D (prefill), 2·N_active·B (decode) plus KV-read terms
+for decode memory sanity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+HW = {
+    "bf16_flops": 197e12,     # per chip
+    "hbm_bw": 819e9,          # bytes/s
+    "ici_bw": 50e9,           # bytes/s per link (conservative: 1 link)
+}
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        # perfect-overlap lower bound: step time = max of the three terms
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def asdict(self) -> dict:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "dominant": self.dominant}
+
+
+def roofline_terms(flops_dev: float, bytes_dev: float,
+                   wire_bytes_dev: float) -> Roofline:
+    return Roofline(flops_dev / HW["bf16_flops"],
+                    bytes_dev / HW["hbm_bw"],
+                    wire_bytes_dev / HW["ici_bw"])
+
+
+def model_flops(cfg, shape, n_active: int) -> float:
+    """Useful-math FLOPs for the whole step (all chips)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n_active * B * S
+    # decode: one token per sequence + attention over the cache
+    attn = 0.0
+    if cfg.n_kv_heads and cfg.family not in ("ssm",):
+        hd = cfg.resolved_head_dim
+        attn = 4.0 * B * S * cfg.n_heads * hd * cfg.n_layers
+    return 2.0 * n_active * B + attn
+
+
+def mfu(model_flops_total: float, step_s: float, chips: int) -> float:
+    return model_flops_total / (step_s * chips * HW["bf16_flops"])

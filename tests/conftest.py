@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real single CPU device (the 512-device forcing is
+# reserved for launch/dryrun.py, per the brief). Keep CPU explicit.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,105 @@
+"""core/ — shadow table, offload engine, solar, descriptors."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.descriptors import (OP_BATCH_READ, OP_LIST_TRAVERSAL,
+                                    TransferPlan, make_descriptor)
+from repro.core.offload_engine import (OffloadEngine, install_batched_read,
+                                       install_list_traversal)
+from repro.core.shadow import ShadowTable
+from repro.core.solar import BLOCK_WORDS, SolarBlockStore
+
+
+# -- shadow table ----------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=8))
+def test_shadow_register_translate_release(sizes):
+    total = sum(sizes) + 4
+    table = ShadowTable(total)
+    regions = []
+    for i, n in enumerate(sizes):
+        regions.append(table.register_region(f"r{i}", n, page_tokens=16))
+    # logical ranges are disjoint and translate to distinct physical pages
+    seen_physical = set()
+    for r in regions:
+        ids = np.arange(r.base_logical, r.base_logical + r.n_pages)
+        phys = table.translate(ids)
+        assert len(set(phys.tolist())) == r.n_pages
+        assert not (set(phys.tolist()) & seen_physical)
+        seen_physical |= set(phys.tolist())
+    # release returns pages to the pool
+    for i, r in enumerate(regions):
+        table.release_region(f"r{i}")
+    assert table.utilization == 0.0
+
+
+def test_shadow_oom():
+    table = ShadowTable(2)
+    table.register_region("a", 2, 16)
+    with pytest.raises(MemoryError):
+        table.register_region("b", 1, 16)
+
+
+# -- offload engine (Table 2 / Listing 1) -----------------------------------
+def test_batched_read_opcode():
+    rng = np.random.default_rng(0)
+    region = rng.standard_normal((64, 16)).astype(np.float32)
+    eng = OffloadEngine()
+    eng.register_dma_region("mem", region)
+    install_batched_read(eng, "mem", value_size=16)
+    offsets = np.array([3, 17, 42, 5], np.int32)
+    resp = eng.handle_packet(OP_BATCH_READ, offsets)
+    exp = region[offsets].ravel()
+    np.testing.assert_allclose(np.asarray(resp), exp, atol=1e-6)
+
+
+def test_batched_read_coalesces_to_one_dma():
+    region = np.arange(32 * 4, dtype=np.float32).reshape(32, 4)
+    eng = OffloadEngine()
+    eng.register_dma_region("mem", region)
+    install_batched_read(eng, "mem", value_size=4)
+    eng.handle_packet(OP_BATCH_READ, np.array([1, 2, 3, 4, 5], np.int32))
+    ctx = eng._qps[0]
+    assert ctx.dma_launches == 1          # 5 reads -> one fused gather
+
+
+def test_list_traversal_opcode():
+    # records: [key, next, value...]; build list 0 -> 2 -> 1 -> end
+    rec = np.zeros((3, 2 + 8), np.float32)
+    rec[0] = [100, 2] + [0] * 8
+    rec[2] = [200, 1] + [1] * 8
+    rec[1] = [300, -1] + [2] * 8
+    eng = OffloadEngine()
+    eng.register_dma_region("list", rec.ravel())
+    install_list_traversal(eng, "list", value_size=8)
+    resp = eng.handle_packet(OP_LIST_TRAVERSAL, (300.0, 0))
+    np.testing.assert_allclose(np.asarray(resp), [2.0] * 8)
+
+
+def test_unregistered_opcode_rejected():
+    eng = OffloadEngine()
+    with pytest.raises(KeyError):
+        eng.handle_packet(0xDEAD, None)
+
+
+# -- solar block store -------------------------------------------------------
+def test_solar_paths_agree():
+    store = SolarBlockStore(n_blocks=64)
+    lbas = np.array([5, 1, 33, 60], np.int32)
+    data_f, crc_f = store.read_flexins(lbas)
+    data_c, crc_c = store.read_cpu(lbas)
+    np.testing.assert_allclose(np.asarray(data_f).reshape(-1, BLOCK_WORDS),
+                               data_c, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(crc_f), crc_c, rtol=1e-5)
+
+
+# -- descriptors -------------------------------------------------------------
+def test_descriptor_roundtrip():
+    d = make_descriptor(7, src=1, dst=2, offset=3, length=4, tag=5, seq=6)
+    assert d.tolist() == [7, 1, 2, 3, 4, 5, 0, 6]
+    plan = TransferPlan(quantize_bits=8)
+    descs = plan.descriptors(4, 1024)
+    assert descs.shape == (4, 8)
+    assert (descs[:, 4] == 256).all()

@@ -1,0 +1,100 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties,
+asserting allclose against each kernel's pure-jnp ref.py oracle
+(interpret=True executes the Pallas body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.kv_ingest import ref as ki_ref
+from repro.kernels.kv_ingest.kv_ingest import kv_ingest
+from repro.kernels.ring_pipe import ref as rp_ref
+from repro.kernels.ring_pipe.ring_pipe import ring_consume
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("B,H,KVH,S,D", [
+    (2, 4, 2, 256, 64),
+    (1, 2, 1, 128, 32),
+    (1, 8, 8, 128, 128),
+    (2, 4, 1, 256, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, H, KVH, S, D, causal, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(keys[0], (B, H, S, D), dtype)
+    k = _rand(keys[1], (B, KVH, S, D), dtype)
+    v = _rand(keys[2], (B, KVH, S, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    exp = fa_ref.reference(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_window(window):
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(keys[0], (1, 2, 256, 64), "float32")
+    k = _rand(keys[1], (1, 2, 256, 64), "float32")
+    v = _rand(keys[2], (1, 2, 256, 64), "float32")
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=64,
+                          block_k=64, interpret=True)
+    exp = fa_ref.reference(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_softcap_and_scale():
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(keys[0], (1, 2, 128, 64), "float32")
+    k = _rand(keys[1], (1, 2, 128, 64), "float32")
+    v = _rand(keys[2], (1, 2, 128, 64), "float32")
+    out = flash_attention(q, k, v, causal=True, sm_scale=0.2, cap=20.0,
+                          block_q=64, block_k=64, interpret=True)
+    exp = fa_ref.reference(q, k, v, causal=True, sm_scale=0.2, cap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 8), st.data())
+def test_kv_ingest_property(n_pages, n_tiles, data):
+    n_tiles = min(n_tiles, n_pages)
+    ids = data.draw(st.permutations(range(n_pages)))[:n_tiles]
+    key = jax.random.PRNGKey(3)
+    pages = _rand(key, (n_pages, 4, 16), "float32")
+    payload = _rand(jax.random.PRNGKey(4), (n_tiles, 4, 16), "float32")
+    ids = jnp.asarray(np.array(ids, np.int32))
+    got = kv_ingest(pages, payload, ids, interpret=True)
+    exp = ki_ref.reference(pages, payload, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int32"])
+def test_kv_ingest_dtypes(dtype):
+    pages = jnp.zeros((8, 2, 8), jnp.dtype(dtype))
+    payload = (jnp.arange(3 * 2 * 8).reshape(3, 2, 8)).astype(dtype)
+    ids = jnp.array([1, 5, 7], jnp.int32)
+    got = kv_ingest(pages, payload, ids, interpret=True)
+    exp = ki_ref.reference(pages, payload, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(2, 32))
+def test_ring_consume_property(n, n_slots):
+    key = jax.random.PRNGKey(5)
+    slots = _rand(key, (n_slots, 8), "float32")
+    src = np.random.default_rng(n).integers(0, n_slots, size=n).astype(np.int32)
+    got = ring_consume(slots, jnp.asarray(src), interpret=True)
+    exp = rp_ref.reference(slots, src)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp))

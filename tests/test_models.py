@@ -1,0 +1,110 @@
+"""Per-arch smoke tests (reduced configs): forward shapes + finiteness,
+one train step on CPU, and decode-vs-forward consistency — for every one
+of the 10 assigned architectures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_archs, reduced
+from repro.models.registry import build_model, count_params_analytic
+from repro.serve.kvcache import pad_caches
+from repro.train import optimizer as optim
+from repro.train.train_loop import make_train_step
+
+ARCHS = list_archs()
+
+
+def _inputs(cfg, key, B=2, S=24):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.frontend.kind != "none":
+        kw["embeddings"] = 0.1 * jax.random.normal(
+            key, (B, cfg.frontend.n_tokens, cfg.d_model), jnp.float32)
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens, kw = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, extras = model.forward(params, tokens, **kw)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = optim.OptConfig(lr=1e-3, warmup_steps=1)
+    opt_state = optim.init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(model, cfg, opt_cfg))
+    tokens, kw = _inputs(cfg, jax.random.PRNGKey(1))
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1), **kw}
+    p1, o1, m1 = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(m1["loss"])), f"{arch}: loss not finite"
+    assert float(m1["grad_norm"]) > 0, f"{arch}: zero grads"
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p1)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, S = 2, 24
+    tokens, kw = _inputs(cfg, jax.random.PRNGKey(3), B, S)
+    full, _ = model.forward(params, tokens, **kw)
+    _, caches = model.prefill(params, tokens[:, :-1], **kw)
+    caches = pad_caches(caches, S - 1, S)
+    dec, _ = model.decode_step(params, tokens[:, -1:], caches,
+                               jnp.int32(S - 1))
+    scale = float(jnp.abs(full[:, -1:]).max())
+    err = float(jnp.abs(full[:, -1:] - dec).max())
+    assert err < 1e-3 * max(scale, 1.0), f"{arch}: decode mismatch {err}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_specs(arch):
+    """Analytic count equals actual initialized parameter count."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    assert actual == count_params_analytic(cfg)
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs land near their published sizes."""
+    expected = {
+        "phi4-mini-3.8b": (3.3e9, 4.6e9),
+        "stablelm-12b": (11e9, 13.5e9),
+        # assignment mandates kv=32 (full MHA); HF ships kv=4, so the
+        # assigned config is ~0.9B heavier than the 7.25B HF checkpoint
+        "codeqwen1.5-7b": (6.3e9, 8.5e9),
+        "gemma-2b": (2.0e9, 3.0e9),
+        "recurrentgemma-2b": (2.2e9, 3.2e9),
+        "granite-moe-1b-a400m": (0.9e9, 1.5e9),
+        "deepseek-v3-671b": (620e9, 700e9),
+        "whisper-base": (5e7, 1.1e8),
+        "mamba2-780m": (6.4e9 / 10, 1.0e9),
+        "internvl2-2b": (1.5e9, 2.4e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = count_params_analytic(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("deepseek-v3-671b")
+    active = count_params_analytic(cfg, active_only=True)
+    total = count_params_analytic(cfg)
+    assert active < 0.1 * total          # 256-expert top-8 => ~3% routed
+    assert 25e9 < active < 45e9          # published ~37B activated

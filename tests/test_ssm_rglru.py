@@ -1,0 +1,94 @@
+"""SSD chunked scan and RG-LRU against naive step-by-step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked
+from repro.models.rglru import rglru_scan
+
+
+def _ssd_naive(xh, dt, A, Bm, Cm, Dp):
+    """Token-by-token discrete SSD recurrence (oracle)."""
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    state = np.zeros((B, H, N, P))
+    ys = np.zeros((B, S, H, P))
+    for t in range(S):
+        a = np.exp(dt[:, t] * A)                       # (B,H)
+        Bh = np.repeat(Bm[:, t], rep, axis=1)          # (B,H,N)
+        Ch = np.repeat(Cm[:, t], rep, axis=1)
+        state = a[..., None, None] * state + \
+            (dt[:, t, :, None] * Bh)[..., None] * xh[:, t, :, None, :]
+        ys[:, t] = np.einsum("bhn,bhnp->bhp", Ch, state) \
+            + Dp[None, :, None] * xh[:, t]
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+@pytest.mark.parametrize("G", [1, 2])
+def test_ssd_chunked_matches_naive(chunk, G):
+    B, S, H, P, N = 2, 32, 4, 8, 16
+    rng = np.random.default_rng(0)
+    xh = rng.standard_normal((B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    Bm = rng.standard_normal((B, S, G, N)).astype(np.float32)
+    Cm = rng.standard_normal((B, S, G, N)).astype(np.float32)
+    Dp = rng.standard_normal((H,)).astype(np.float32)
+    y, final = ssd_chunked(jnp.asarray(xh), jnp.asarray(dt), jnp.asarray(A),
+                           jnp.asarray(Bm), jnp.asarray(Cm), jnp.asarray(Dp),
+                           chunk)
+    y_exp, state_exp = _ssd_naive(xh, dt, A, Bm, Cm, Dp)
+    np.testing.assert_allclose(np.asarray(y), y_exp, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), state_exp, atol=1e-4,
+                               rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([4, 8, 16]))
+def test_ssd_chunk_size_invariance(seed, chunk):
+    """The chunked algorithm is exact for every chunk size."""
+    B, S, H, P, N = 1, 16, 2, 4, 8
+    rng = np.random.default_rng(seed)
+    xh = rng.standard_normal((B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.3, (B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    Bm = rng.standard_normal((B, S, 1, N)).astype(np.float32)
+    Cm = rng.standard_normal((B, S, 1, N)).astype(np.float32)
+    Dp = np.zeros((H,), np.float32)
+    y1, f1 = ssd_chunked(*map(jnp.asarray, (xh, dt, A, Bm, Cm, Dp)), chunk)
+    y2, f2 = ssd_chunked(*map(jnp.asarray, (xh, dt, A, Bm, Cm, Dp)), S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rglru_scan_matches_loop():
+    B, S, R = 2, 40, 8
+    rng = np.random.default_rng(1)
+    a = rng.uniform(0.5, 0.99, (B, S, R)).astype(np.float32)
+    b = rng.standard_normal((B, S, R)).astype(np.float32)
+    h0 = rng.standard_normal((B, R)).astype(np.float32)
+    got = rglru_scan(jnp.asarray(a), jnp.asarray(b), jnp.asarray(h0))
+    h = h0.copy()
+    exp = np.zeros((B, S, R), np.float32)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        exp[:, t] = h
+    np.testing.assert_allclose(np.asarray(got), exp, atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_scan_no_initial_state():
+    B, S, R = 1, 8, 4
+    rng = np.random.default_rng(2)
+    a = rng.uniform(0.1, 0.9, (B, S, R)).astype(np.float32)
+    b = rng.standard_normal((B, S, R)).astype(np.float32)
+    got = rglru_scan(jnp.asarray(a), jnp.asarray(b))
+    h = np.zeros((B, R), np.float32)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+    np.testing.assert_allclose(np.asarray(got[:, -1]), h, atol=1e-5)
