@@ -1,0 +1,114 @@
+"""Verbs-layer cost (§4): what does the IBV compatibility layer add over
+programming the engines directly?
+
+  * verbs_overhead_*: the same aggregated block read issued (a) as a raw
+    `OffloadEngine.handle_packet` call and (b) as a verbs custom-opcode
+    SEND + poll_cq — the delta is the whole control-plane tax (WQE
+    encode, QP processing, CQE publish/poll over the T3 ring);
+  * inline vs non-inline SEND: the ≤64B header-only split vs the payload
+    path;
+  * poll_cq batching: ring DMAs per completion as the per-flush batch
+    grows (the Fig. 15 sublinear curve, now at the verbs surface).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import time
+
+import jax
+
+from benchmarks.common import time_call
+from repro import verbs
+from repro.core.descriptors import OP_BLOCK_READ_4K
+from repro.core.solar import SolarBlockStore
+
+
+def _best_of_paired(fa, fb, warmup=3, iters=25):
+    """Interleaved min wall times (us) of two callables. Alternating the
+    paths inside one loop cancels machine drift between the two
+    measurements; min (not median) is the noise floor — the paths share
+    one jitted kernel and differ only by python control-plane work."""
+    for _ in range(warmup):
+        fa()
+        fb()
+    best_a = best_b = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        fa()
+        best_a = min(best_a, (time.perf_counter_ns() - t0) / 1e3)
+        t0 = time.perf_counter_ns()
+        fb()
+        best_b = min(best_b, (time.perf_counter_ns() - t0) / 1e3)
+    return best_a, best_b
+
+
+def run():
+    rows = []
+    store = SolarBlockStore(n_blocks=4096)
+    rng = np.random.default_rng(0)
+
+    batch = 8                   # requests per doorbell (one flush/poll)
+    for n in (512, 2048):
+        reqs = [rng.integers(0, store.n_blocks, n).astype(np.int32)
+                for _ in range(batch)]
+
+        def direct():
+            out = [store.engine.handle_packet(OP_BLOCK_READ_4K, r)
+                   for r in reqs]
+            jax.block_until_ready(out)
+
+        def via_verbs():
+            for i, r in enumerate(reqs):
+                store.pair.client.post_send(verbs.SendWR(
+                    wr_id=i, opcode=OP_BLOCK_READ_4K, payload=r))
+            store.pair.client.flush()
+            jax.block_until_ready(
+                [w.data for w in store.pair.client_cq.poll()])
+
+        us_direct, us_verbs = _best_of_paired(direct, via_verbs)
+        ovh = (us_verbs - us_direct) / us_direct * 100.0
+        rows.append((f"verbs_overhead_{n}lba_direct", us_direct / batch,
+                     f"path=handle_packet;n={n};batch={batch}"))
+        rows.append((f"verbs_overhead_{n}lba_verbs", us_verbs / batch,
+                     f"path=post_send+poll_cq;overhead_pct={ovh:.1f}"))
+
+    # inline (<=64B rides the WQE) vs non-inline (payload path) SEND
+    pair = verbs.VerbsPair(depth=4096, publish_every=64)
+    small = np.arange(8, dtype=np.int64)             # 64B: inline
+    big = np.arange(4096, dtype=np.float32)          # 16KB: payload path
+
+    def send_one(payload, inline):
+        pair.server.post_recv(verbs.RecvWR())
+        pair.client.post_send(verbs.SendWR(payload=payload, inline=inline,
+                                           signaled=False))
+        pair.client.flush()
+        return pair.server_recv_cq.poll()
+
+    us_in = time_call(lambda: send_one(small, True), warmup=3, iters=9)
+    us_out = time_call(lambda: send_one(big, False), warmup=3, iters=9)
+    rows.append(("verbs_send_inline_64B", us_in,
+                 f"wqe_cachelines=2;ratio_vs_noninline={us_in/us_out:.2f}"))
+    rows.append(("verbs_send_noninline_16KB", us_out, "payload_path=1"))
+
+    # poll_cq batching: ring DMAs per CQE vs per-flush batch size
+    for batch in (1, 8, 64):
+        p = verbs.VerbsPair(depth=4096, publish_every=64)
+        total = 256
+
+        def pump():
+            done = 0
+            while done < total:
+                for i in range(batch):
+                    p.server.post_recv(verbs.RecvWR(wr_id=i))
+                    p.client.post_send(verbs.SendWR(
+                        payload=small, signaled=False))
+                p.client.flush()                 # one CQE batch
+                done += len(p.server_recv_cq.poll())
+
+        us = time_call(pump, warmup=1, iters=3)
+        ring = p.server_recv_cq.ring
+        per_cqe = ring.dma_writes / max(1, ring.head)
+        rows.append((f"verbs_pollcq_batch{batch}", us / total,
+                     f"ring_dma_writes_per_cqe={per_cqe:.3f}"))
+    return rows

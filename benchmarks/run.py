@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_offload",        # Fig 16
     "benchmarks.bench_solar",          # Fig 17
     "benchmarks.bench_kvtransfer",     # Fig 18
+    "benchmarks.bench_verbs",          # §4 verbs-layer overhead
     "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
 ]
 

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verify (see ROADMAP.md). Usage:
+#   scripts/tier1.sh            # the full tier-1 command
+#   scripts/tier1.sh --smoke    # fast subset: skips @pytest.mark.slow
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--smoke" ]]; then
+    exec python -m pytest -x -q -m "not slow" "${@:2}"
+fi
+exec python -m pytest -x -q "$@"

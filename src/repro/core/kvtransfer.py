@@ -2,11 +2,13 @@
 
 Prefill pods produce KV caches in the *streaming layout* (sequence sharded
 over `model`, batch over `data`) — the same layout decode consumes. The
-transfer is therefore zero-copy in the FlexiNS sense: the payload moves
-once, pod->pod, already striped over all 256 per-pod ICI paths (packet
-spraying). The staged baseline re-replicates over `model` first (the QP
-hash-collision analogue: all bytes ride one path per data-row, stripe-
-factor more wire traffic).
+transfer is issued as ONE verbs SEND on an RC queue pair over the mesh
+transport: the WQE/CQE headers ride the T3 ring (the CQ), the payload
+moves once, pod->pod, already striped over all 256 per-pod ICI paths
+(packet spraying, via `tx_engine.transmit` under `MeshTransport`). The
+staged baseline re-replicates over `model` first (the QP hash-collision
+analogue: all bytes ride one path per data-row, stripe-factor more wire
+traffic).
 
 Wire compression (int8 KV) is the beyond-paper knob (DESIGN.md §8).
 """
@@ -17,11 +19,9 @@ from dataclasses import dataclass
 import jax
 import numpy as np
 
+from repro import verbs
 from repro.core.descriptors import TransferPlan
 from repro.core import tx_engine
-from repro.core.notification import Ring
-from repro.models import module as mod
-from repro.parallel import sharding
 
 
 @dataclass
@@ -31,41 +31,56 @@ class TransferStats:
     header_bytes: int = 0
 
 
+def account(caches, plan: TransferPlan) -> TransferStats:
+    """Header/payload byte accounting: one 64B descriptor per cache leaf
+    on the control path, payload bytes on the wire."""
+    stats = TransferStats()
+    leaves = jax.tree.leaves(caches)
+    stats.n_leaves = len(leaves)
+    stats.payload_bytes = int(sum(l.size * l.dtype.itemsize
+                                  for l in leaves))
+    descs = plan.descriptors(len(leaves), stats.payload_bytes)
+    stats.header_bytes = int(descs.nbytes)
+    return stats
+
+
 class KVTransferEngine:
-    """Moves a model's decode cache across the `pod` axis."""
+    """Moves a model's decode cache across the `pod` axis through the
+    verbs layer: an RC QP pair on a MeshTransport, one SEND per transfer."""
 
     def __init__(self, model, batch: int, seq_len: int,
                  plan: TransferPlan | None = None):
         self.model = model
         self.plan = plan or TransferPlan()
         self.spec_tree = model.cache_specs(batch, seq_len)
-        self.ring = Ring(capacity=256)
+        self.pair = verbs.VerbsPair(
+            transport=verbs.MeshTransport(self.plan), depth=256)
+        self.ring = self.pair.server_recv_cq.ring   # the header path (T3)
         self.stats = TransferStats()
+        self._wr_id = 0
 
-    def _account(self, caches):
-        leaves = jax.tree.leaves(caches)
-        self.stats.n_leaves = len(leaves)
-        self.stats.payload_bytes = int(sum(l.size * l.dtype.itemsize
-                                           for l in leaves))
-        descs = self.plan.descriptors(len(leaves), self.stats.payload_bytes)
-        self.stats.header_bytes = int(descs.nbytes)
-        self.ring.produce(descs)           # header rides the control path
-        self.ring.consume()
+    def _send(self, caches, staged: bool):
+        self.stats = account(caches, self.plan)
+        self.pair.transport.staged = staged
+        self._wr_id += 1
+        wc = self.pair.send(caches, wr_id=self._wr_id,
+                            spec_tree=self.spec_tree, inline=False)
+        assert wc.ok, f"transfer completion status {wc.status}"
+        self.pair.client_cq.poll()          # retire the send completion
+        return wc.data
 
     def transfer(self, caches):
-        """FlexiNS path: header via ring, payload via striped ppermute."""
-        self._account(caches)
-        return tx_engine.transmit(caches, self.spec_tree, self.plan)
+        """FlexiNS path: headers on the CQ ring, payload via striped
+        ppermute."""
+        return self._send(caches, staged=False)
 
     def transfer_staged(self, caches):
         """Naive baseline (replicate-then-move)."""
-        self._account(caches)
-        return tx_engine.transmit_staged(caches, self.spec_tree, self.plan)
+        return self._send(caches, staged=True)
 
     def make_transfer_step(self, staged: bool = False):
-        """A jittable cache->cache function (dry-run / benchmarks)."""
-        fn = self.transfer_staged if staged else self.transfer
-
+        """A jittable cache->cache function (dry-run / benchmarks): the
+        lowered payload path of the SEND, without the control plane."""
         def step(caches):
             return (tx_engine.transmit_staged if staged else
                     tx_engine.transmit)(caches, self.spec_tree, self.plan)

@@ -55,11 +55,14 @@ class Ring:
 
     # -- producer ----------------------------------------------------------
     def produce(self, batch: np.ndarray) -> int:
-        """batch: (n, width) descriptors; one batched DMA. Returns n
-        accepted (raises RingFullError if there is no room even after a
-        counter refresh — the paper's producer would spin)."""
+        """batch: (n, width) descriptors; one batched DMA. All-or-nothing:
+        accepts the whole batch and returns n, or raises RingFullError if
+        there is no room even after a counter refresh (the paper's
+        producer would spin). An empty batch is a no-op (no DMA)."""
         batch = np.atleast_2d(np.asarray(batch, np.int64))
         n = batch.shape[0]
+        if n == 0:
+            return 0
         if self._credit() < n:
             # out of credit: pay one DMA read to refresh the counter
             self._producer_view = self._published_tail

@@ -52,10 +52,15 @@ class QPContext:
         self.resp = jnp.zeros((size,), dtype)
         return self.resp
 
-    def submit_dma(self, op: str, region: str, offsets, length: int) -> int:
+    def submit_dma(self, op: str, region: str, offsets, length: int,
+                   buf=None) -> int:
+        """Queue one DMA. WRITEs carry their source data in `buf`
+        (record rows matching `offsets`); READs leave it None."""
         dma_id = len(self._dma_queue)
+        if buf is not None:
+            buf = jnp.asarray(buf)
         self._dma_queue.append(
-            DmaOp(op, region, np.asarray(offsets, np.int32), length))
+            DmaOp(op, region, np.asarray(offsets, np.int32), length, buf))
         return dma_id
 
     def wait_dma_finish(self, dma_id: int):
@@ -64,36 +69,48 @@ class QPContext:
         return self._dma_done[dma_id]
 
     def _flush(self):
-        """Coalesce every queued READ against the same region into ONE
-        gather (the batched-DMA win). Offsets are record indices; `length`
-        is the record size in elements."""
+        """Coalesce queued READs against the same region into fused
+        gathers (the batched-DMA win). Offsets are record indices;
+        `length` is the record size in elements. Ops against one region
+        retire in submission order — a WRITE fences the read-run around
+        it, so read-after-write sees the write (RC ordering) while a
+        write-free batch of N reads still costs ONE gather."""
         pending = [(i, d) for i, d in enumerate(self._dma_queue)
                    if i not in self._dma_done]
         by_region: dict[str, list[tuple[int, DmaOp]]] = {}
         for i, d in pending:
             by_region.setdefault(d.region, []).append((i, d))
         for region, items in by_region.items():
-            arr = self.engine.regions[region]
-            reads = [(i, d) for i, d in items if d.op == "READ"]
-            if reads:
-                L = reads[0][1].length
-                assert all(d.length == L for _, d in reads), \
+            run: list[tuple[int, DmaOp]] = []
+
+            def gather_run():
+                if not run:
+                    return
+                arr = self.engine.regions[region]
+                L = run[0][1].length
+                assert all(d.length == L for _, d in run), \
                     "mixed record sizes in one flush group"
-                offs = np.concatenate([d.offsets.ravel() for _, d in reads])
+                offs = np.concatenate([d.offsets.ravel() for _, d in run])
                 idx = offs[:, None].astype(np.int64) * L + np.arange(L)
                 flat = jnp.take(arr.ravel(), jnp.asarray(idx), axis=0)
                 self.dma_launches += 1
                 c = 0
-                for i, d in reads:
+                for i, d in run:
                     n = d.offsets.size
                     self._dma_done[i] = flat[c:c + n]
                     c += n
+                run.clear()
+
             for i, d in items:
-                if d.op == "WRITE":
-                    arr = arr.at[d.offsets].set(d.buf)
-                    self.engine.regions[region] = arr
+                if d.op == "READ":
+                    run.append((i, d))
+                else:               # WRITE fences the pending read-run
+                    gather_run()
+                    arr = self.engine.regions[region]
+                    self.engine.regions[region] = arr.at[d.offsets].set(d.buf)
                     self._dma_done[i] = True
                     self.dma_launches += 1
+            gather_run()
 
     def submit_resp(self, buf):
         self.resp = buf
@@ -114,6 +131,12 @@ class OffloadEngine:
     def register_dma_region(self, name: str, array) -> str:
         self.regions[name] = jnp.asarray(array)
         return name
+
+    def bind_context(self, qp_id: int, ctx: QPContext):
+        """Adopt an externally-owned QPContext (the verbs layer creates
+        one per QueuePair) so `handle_packet` dispatches into it."""
+        self._qps[qp_id] = ctx
+        return ctx
 
     def handle_packet(self, opcode: int, packet, qp_id: int = 0):
         """Network-stack dispatch: a packet with a registered opcode is

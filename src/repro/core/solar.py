@@ -1,13 +1,13 @@
 """Disaggregated block storage over the offload engine (paper §5.7 Fig. 17,
 Alibaba Solar transport / 4KB READ IOPS).
 
-The storage server's blocks live in a registered DMA region; the storage
-agent issues 4KB READs. Three paths reproduce the paper's comparison:
-  * flexins:   one BLOCK_READ_4K opcode request carrying N LBAs; the
-               server coalesces them into one fused gather ("CRC offload"
-               is a fused on-device checksum) — paper's FlexiNS bar.
-  * solar_cpu: per-request python-loop reads with a host-side checksum —
-               the Solar-CPU baseline bar.
+The storage server's blocks live in an MR registered on a verbs
+protection domain; the storage agent is a verbs client QP. Reads are
+issued as ONE custom-opcode SEND carrying N LBAs (the Table-2 escape
+hatch dispatches it into the offload engine); the server coalesces them
+into one fused gather ("CRC offload" is a fused on-device checksum) —
+paper's FlexiNS bar. `solar_cpu` is the per-request python-loop baseline
+with a host-side checksum.
 """
 from __future__ import annotations
 
@@ -15,8 +15,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import verbs
 from repro.core.descriptors import OP_BLOCK_READ_4K
-from repro.core.offload_engine import OffloadEngine, QPContext
+from repro.core.offload_engine import QPContext
 
 BLOCK_WORDS = 1024          # 4 KiB of f32
 
@@ -26,14 +27,17 @@ class SolarBlockStore:
         rng = np.random.default_rng(seed)
         blocks = rng.standard_normal((n_blocks, BLOCK_WORDS)).astype(np.float32)
         self.n_blocks = n_blocks
-        self.engine = OffloadEngine()
-        self.engine.register_dma_region("blocks", blocks)
+        self.pd = verbs.ProtectionDomain()
+        self.engine = self.pd.engine
+        self.mr = self.pd.reg_mr("blocks", blocks)
         # production handler: ONE jitted fused gather + checksum launch
         # (the Table-2 submit_dma/wait machinery stays available and is
         # semantics-tested in tests/test_core.py; the hot path is fused)
         self._fused = jax.jit(lambda blocks, lbas: (
             blocks[lbas], jnp.sum(blocks[lbas], axis=-1, dtype=jnp.float32)))
         self._install()
+        # the agent <-> server RC connection (loopback on the test rig)
+        self.pair = verbs.VerbsPair(pd=self.pd)
         self._host_blocks = blocks          # for the CPU baseline
 
     def _install(self):
@@ -47,8 +51,28 @@ class SolarBlockStore:
 
     # -- FlexiNS path -------------------------------------------------------
     def read_flexins(self, lbas: np.ndarray):
-        """One aggregated request, coalesced device gather + fused crc."""
-        return self.engine.handle_packet(OP_BLOCK_READ_4K, lbas)
+        """One aggregated verbs request: custom-opcode SEND -> coalesced
+        device gather + fused crc, response in the completion."""
+        wc = self.pair.rpc(OP_BLOCK_READ_4K, lbas)
+        assert wc.ok, f"BLOCK_READ_4K completion status {wc.status}"
+        return wc.data
+
+    # -- one-sided path ---------------------------------------------------
+    def read_rdma(self, lbas: np.ndarray):
+        """The same blocks via raw RDMA_READ verbs (no CRC offload): each
+        flush-sized chunk of reads coalesces into one gather server-side."""
+        lbas = np.asarray(lbas, np.int64)
+        parts = []
+        chunk = self.pair.client.max_send_wr
+        for base in range(0, len(lbas), chunk):
+            for i, lba in enumerate(lbas[base:base + chunk]):
+                self.pair.client.post_send(verbs.SendWR(
+                    wr_id=int(base + i), opcode=verbs.IBV_WR_RDMA_READ,
+                    remote_key=self.mr.rkey, remote_offsets=[int(lba)]))
+            self.pair.client.flush()
+            parts.extend(jnp.asarray(w.data)
+                         for w in self.pair.client_cq.poll())
+        return jnp.concatenate(parts, axis=0)
 
     # -- CPU baseline ---------------------------------------------------
     def read_cpu(self, lbas: np.ndarray):

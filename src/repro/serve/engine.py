@@ -1,12 +1,15 @@
 """Batched serving engine.
 
-Request flow (the FlexiNS verbs path):
-  submit()  — the app posts a *descriptor* (req id, prompt length) into the
-              T3 notification ring; the prompt payload lands in a pinned
-              token table, never in the ring (header/payload split);
-  step()    — the engine drains the ring (batched), prefills new requests,
-              and runs one batched decode step across all active slots with
-              per-slot positions (continuous batching).
+Request flow (the FlexiNS verbs path, through `repro.verbs`):
+  submit()  — the app is a verbs *client*: it posts an inline SEND whose
+              64B payload is the request descriptor (req id, prompt
+              length); the WQE rides the header path, the prompt payload
+              lands in a pinned token table, never on the wire
+              (header/payload split);
+  step()    — the engine is the *server* QP: it polls its recv CQ — the
+              T3 notification ring, drained batched — prefills new
+              requests, and runs one batched decode step across all
+              active slots with per-slot positions (continuous batching).
 """
 from __future__ import annotations
 
@@ -16,8 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import verbs
 from repro.core.descriptors import make_descriptor, OP_KV_WRITE
-from repro.core.notification import Ring
 from repro.serve.kvcache import pad_caches
 
 
@@ -38,7 +41,9 @@ class ServeEngine:
         self.cfg = model.cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.ring = Ring(ring_capacity)
+        self.pair = verbs.VerbsPair(depth=ring_capacity,
+                                    max_wr=max(256, 2 * max_batch))
+        self.ring = self.pair.server_recv_cq.ring   # the T3 header pipe
         self.pinned_prompts: dict[int, np.ndarray] = {}   # payload table
         self.requests: dict[int, Request] = {}
         self.slots: list[int | None] = [None] * max_batch
@@ -54,9 +59,16 @@ class ServeEngine:
         self._next_id += 1
         self.pinned_prompts[rid] = np.asarray(prompt, np.int32)
         self.requests[rid] = Request(rid, list(prompt), max_new_tokens)
-        self.ring.produce(make_descriptor(OP_KV_WRITE, src=rid,
-                                          length=len(prompt))[None])
+        self._post_descriptor(make_descriptor(OP_KV_WRITE, src=rid,
+                                              length=len(prompt)))
         return rid
+
+    def _post_descriptor(self, desc: np.ndarray):
+        """Inline verbs SEND: the 64B request descriptor IS the payload
+        (unsignaled — the recv completion is the notification)."""
+        self.pair.client.post_send(verbs.SendWR(
+            wr_id=int(desc[1]), payload=np.asarray(desc, np.int64),
+            inline=True, signaled=False))
 
     # -- engine side ----------------------------------------------------
     def _free_slot(self) -> int | None:
@@ -66,15 +78,21 @@ class ServeEngine:
         return None
 
     def _admit(self):
-        pending = list(self.ring.consume())
+        # top up recv credits, then ring the doorbell: pending WQEs (incl.
+        # RNR-stalled re-posts) deliver, CQEs land batched on the ring
+        while len(self.pair.server.rq) < self.max_batch * 2:
+            self.pair.server.post_recv(verbs.RecvWR())
+        self.pair.client.flush()
+        pending = [wc.data for wc in self.pair.server_recv_cq.poll()]
         for i, d in enumerate(pending):
             rid = int(d[1])
             slot = self._free_slot()
             if slot is None:
-                # re-queue EVERY remaining drained descriptor: the ring
-                # absorbs the burst (paper's burst argument), nothing drops
+                # re-post EVERY remaining drained descriptor: the verbs
+                # queues absorb the burst (paper's burst argument),
+                # nothing drops
                 for d2 in pending[i:]:
-                    self.ring.produce(np.asarray(d2)[None])
+                    self._post_descriptor(np.asarray(d2))
                 break
             req = self.requests[rid]
             prompt = self.pinned_prompts[rid][None, :]       # (1, P)

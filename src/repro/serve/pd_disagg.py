@@ -1,7 +1,8 @@
 """Prefill/decode disaggregation (paper §5.7 KVCache-transfer workload).
 
-A prefill engine produces KV caches; the KVTransferEngine ships them over
-the `pod` mesh axis (striped / "sprayed"); the decode engine ingests them
+A prefill engine produces KV caches; a verbs SEND on a mesh-transport QP
+ships them over the `pod` mesh axis (striped / "sprayed"); the decode
+engine ingests them
 into its paged pool and serves decode steps. On the CPU test rig the pod
 axis degenerates to identity transfer, but every API, layout and
 descriptor path is the production one — the multi-pod dry-run lowers the
@@ -13,8 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import verbs
 from repro.core.descriptors import TransferPlan
-from repro.core.kvtransfer import KVTransferEngine
+from repro.core.kvtransfer import account
 from repro.serve.kvcache import PagedKVPool, pad_caches
 
 
@@ -39,9 +41,15 @@ class PDServer:
 
     # -- the wire ---------------------------------------------------------
     def transfer(self, caches, batch: int, seq_len: int, staged=False):
-        eng = KVTransferEngine(self.model, batch, seq_len, self.plan)
-        fn = eng.transfer_staged if staged else eng.transfer
-        return fn(caches), eng.stats
+        """One verbs SEND per transfer: prefill is the client QP, decode
+        the server; headers ride the CQ ring, payload the mesh wire."""
+        spec_tree = self.model.cache_specs(batch, seq_len)
+        pair = verbs.VerbsPair(
+            transport=verbs.MeshTransport(self.plan, staged=staged))
+        stats = account(caches, self.plan)
+        wc = pair.send(caches, spec_tree=spec_tree, inline=False)
+        assert wc.ok, f"KV transfer completion status {wc.status}"
+        return wc.data, stats
 
     # -- decode pod (with paged ingest) ----------------------------------
     def ingest_and_decode(self, caches, first_tokens, prefill_len: int,

@@ -1,0 +1,31 @@
+"""Software IBV-verbs compatibility layer (paper §4).
+
+One API over the four FlexiNS engines:
+
+  ProtectionDomain/MemoryRegion  -> T4 offload-engine DMA regions
+  QueuePair (RESET->INIT->RTR->RTS), post_send/post_recv  -> T1 TX path
+  CompletionQueue.poll  -> T3 DMA-only notification ring
+  custom opcodes via post_send  -> T4 handler dispatch (Table 2)
+
+See src/repro/verbs/README.md for the verbs <-> engine mapping table.
+"""
+from repro.verbs.cq import CompletionQueue, CQOverrunError, WorkCompletion
+from repro.verbs.pd import MemoryRegion, ProtectionDomain
+from repro.verbs.qp import (QPState, QPStateError, QueuePair, RecvWR,
+                            SendWR)
+from repro.verbs.transport import (LoopbackTransport, MeshTransport,
+                                   VerbsPair, connect)
+from repro.verbs.wqe import (IBV_WC_ACCESS_ERR, IBV_WC_RECV, IBV_WC_RNR_ERR,
+                             IBV_WC_SUCCESS, IBV_WR_RDMA_READ,
+                             IBV_WR_RDMA_WRITE, IBV_WR_SEND,
+                             INLINE_MAX_BYTES)
+
+__all__ = [
+    "CompletionQueue", "CQOverrunError", "WorkCompletion",
+    "MemoryRegion", "ProtectionDomain",
+    "QPState", "QPStateError", "QueuePair", "RecvWR", "SendWR",
+    "LoopbackTransport", "MeshTransport", "VerbsPair", "connect",
+    "IBV_WC_ACCESS_ERR", "IBV_WC_RECV", "IBV_WC_RNR_ERR", "IBV_WC_SUCCESS",
+    "IBV_WR_RDMA_READ", "IBV_WR_RDMA_WRITE", "IBV_WR_SEND",
+    "INLINE_MAX_BYTES",
+]

@@ -1,0 +1,111 @@
+"""Completion queue on the T3 DMA-only notification ring.
+
+CQEs are 64B descriptors (`wqe.encode_cqe`). The transport pushes every
+completion of one processing pass into `_pending` and publishes them with
+ONE `Ring.produce` — so `ring.dma_writes` grows per *flush*, not per CQE
+(the paper's batched-ring argument, Fig. 15). `poll` is the consumer side:
+it drains the ring and decodes descriptors back into `WorkCompletion`s.
+
+Payload data that cannot ride a 64B cacheline (non-inline SEND deliveries,
+RDMA_READ results, custom-opcode responses) travels out-of-band in a
+seq-keyed sideband — the software analogue of the NIC DMA-ing payload
+into the posted buffer while the CQE only carries metadata.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from repro.core.descriptors import W_SEQ
+from repro.core.notification import Ring
+from repro.verbs import wqe
+
+
+class CQOverrunError(RuntimeError):
+    pass
+
+
+@dataclass(frozen=True)
+class WorkCompletion:
+    wr_id: int
+    opcode: int
+    status: int = wqe.IBV_WC_SUCCESS
+    length: int = 0
+    data: Any = None          # delivered payload / RDMA_READ result / resp
+
+    @property
+    def ok(self) -> bool:
+        return self.status == wqe.IBV_WC_SUCCESS
+
+
+class CompletionQueue:
+    def __init__(self, depth: int = 256, publish_every: int = 8):
+        self.ring = Ring(depth, publish_every=publish_every)
+        self._pending: list[np.ndarray] = []
+        self._sideband: dict[int, Any] = {}
+        self._seq = 0
+
+    # -- producer (transport) side ----------------------------------------
+    def push(self, cqe: np.ndarray, data=None):
+        """Stage one CQE; nothing hits the ring until `flush`."""
+        cqe = np.asarray(cqe, np.int64).copy()
+        cqe[W_SEQ] = self._seq
+        if data is not None:
+            self._sideband[self._seq] = data
+        self._seq += 1
+        self._pending.append(cqe)
+
+    def flush(self):
+        """Publish staged CQEs: one batched ring DMA when they fit (the
+        common case), chunked by ring credit when the batch outsizes the
+        free slots. Unpublishable CQEs stay staged (a poll frees slots
+        and retries); raises CQOverrunError only when the ring is full
+        and nothing could be published."""
+        from repro.core.notification import RingFullError
+        published = 0
+        while self._pending:
+            n = min(len(self._pending),
+                    self.ring.capacity - len(self.ring))
+            if n <= 0:
+                break
+            batch = np.stack(self._pending[:n])
+            try:
+                self.ring.produce(batch)
+            except RingFullError:
+                break
+            del self._pending[:n]
+            published += n
+        if self._pending and published == 0:
+            raise CQOverrunError(
+                f"CQ depth {self.ring.capacity} full with "
+                f"{len(self._pending)} CQEs staged — poll_cq to drain")
+        return published
+
+    # -- consumer (application) side --------------------------------------
+    def poll(self, max_n: int | None = None) -> list[WorkCompletion]:
+        """ibv_poll_cq: drain up to max_n completions (0..n, never blocks).
+        Drains the ring *before* flushing so a batch that previously
+        overran the ring gets its slots back and publishes now."""
+        out = self._drain(max_n)
+        if self._pending and (max_n is None or len(out) < max_n):
+            # publish the consumer counter so the producer-side flush
+            # sees the freed slots (one extra counter DMA, only on the
+            # backlogged path)
+            self.ring.force_publish()
+            self.flush()
+            out += self._drain(None if max_n is None else max_n - len(out))
+        return out
+
+    def _drain(self, max_n: int | None) -> list[WorkCompletion]:
+        out = []
+        for desc in self.ring.consume(max_n):
+            f = wqe.cqe_fields(desc)
+            out.append(WorkCompletion(
+                wr_id=f["wr_id"], opcode=f["opcode"], status=f["status"],
+                length=f["length"], data=self._sideband.pop(f["seq"], None)))
+        return out
+
+    def __len__(self):
+        return len(self.ring) + len(self._pending)

@@ -1,0 +1,198 @@
+"""Queue pairs: the RC state machine and the send/recv work queues.
+
+A `QueuePair` is created on a `ProtectionDomain` and walks the standard
+RC ladder RESET -> INIT -> RTR -> RTS (`modify`); posting rules follow
+ibverbs: `post_recv` needs INIT or later, `post_send` needs RTS, and the
+transport refuses to deliver into a QP that has not reached RTR.
+
+Each QP owns a T4 `QPContext` on its pd's offload engine — one-sided
+verbs are lowered onto `submit_dma`, so everything a processing pass
+queues against one QP coalesces through `QPContext._flush` (the batched
+DMA win; Fig. 16b).
+"""
+from __future__ import annotations
+
+import enum
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.offload_engine import QPContext
+from repro.verbs import wqe
+from repro.verbs.pd import MemoryRegion, ProtectionDomain
+
+
+class QPState(enum.IntEnum):
+    RESET = 0
+    INIT = 1
+    RTR = 2       # ready to receive
+    RTS = 3       # ready to send
+    ERR = 4
+
+
+_LEGAL = {
+    QPState.RESET: {QPState.INIT},
+    QPState.INIT: {QPState.RTR, QPState.RESET},
+    QPState.RTR: {QPState.RTS, QPState.RESET},
+    QPState.RTS: {QPState.RESET, QPState.ERR},
+    QPState.ERR: {QPState.RESET},
+}
+
+
+class QPStateError(RuntimeError):
+    pass
+
+
+def _flat_inlinable(payload) -> bool:
+    """True when the payload survives the inline flat-bytes roundtrip
+    unchanged: a plain <=1-D array (not a pytree, not multi-dim)."""
+    if payload is None or isinstance(payload, (dict, tuple)):
+        return False
+    try:
+        return np.asarray(payload).ndim <= 1
+    except Exception:
+        return False
+
+
+@dataclass
+class SendWR:
+    """One send work request.
+
+    opcode      IBV_WR_SEND / IBV_WR_RDMA_WRITE / IBV_WR_RDMA_READ, or any
+                custom opcode registered with the remote offload engine.
+    payload     by-value payload (SEND / RDMA_WRITE / custom). May be a
+                pytree for mesh-transport SENDs (spec_tree then required
+                for a striped wire; without it the tree moves as-is).
+    mr/offsets  local MR + record offsets: SEND/WRITE source when payload
+                is None, RDMA_READ landing zone when given.
+    remote_key  rkey of the remote MR (one-sided ops only).
+    remote_offsets  record offsets into the remote MR.
+    inline      force/deny inlining; None = auto (inline iff <= 64B).
+    """
+    wr_id: int = 0
+    opcode: int = wqe.IBV_WR_SEND
+    payload: Any = None
+    mr: MemoryRegion | None = None
+    offsets: Any = None
+    remote_key: int = 0
+    remote_offsets: Any = None
+    inline: bool | None = None
+    signaled: bool = True
+    spec_tree: Any = None
+
+
+@dataclass
+class RecvWR:
+    """A receive buffer posting: SENDs land in mr[offsets] when an MR is
+    given, otherwise the payload is delivered in the CQE sideband."""
+    wr_id: int = 0
+    mr: MemoryRegion | None = None
+    offsets: Any = None
+
+
+@dataclass
+class _PostedSend:
+    desc: np.ndarray
+    wr: SendWR
+    inline_row: np.ndarray | None = None
+    inline_nbytes: int = 0
+    inline_dtype: int = 0
+
+
+class QueuePair:
+    _next_qp_num = 1
+
+    def __init__(self, pd: ProtectionDomain, send_cq, recv_cq=None, *,
+                 max_send_wr: int = 256, max_recv_wr: int = 256):
+        self.pd = pd
+        self.send_cq = send_cq
+        self.recv_cq = recv_cq if recv_cq is not None else send_cq
+        self.max_send_wr = max_send_wr
+        self.max_recv_wr = max_recv_wr
+        self.qp_num = QueuePair._next_qp_num
+        QueuePair._next_qp_num += 1
+        self.state = QPState.RESET
+        self.dest_qp_num: int | None = None
+        self.sq: deque[_PostedSend] = deque()
+        self.rq: deque[RecvWR] = deque()
+        self.transport = None
+        # the T4 context every one-sided op against this QP coalesces in
+        # (bound into the engine so handle_packet dispatches into it too)
+        self.ctx = pd.engine.bind_context(self.qp_num,
+                                          QPContext(self.qp_num, pd.engine))
+
+    # -- state machine ------------------------------------------------------
+    def modify(self, state: QPState, *, dest_qp_num: int | None = None):
+        """ibv_modify_qp: enforce the RC ladder; RTR pins the peer."""
+        state = QPState(state)
+        if state not in _LEGAL[self.state]:
+            raise QPStateError(f"illegal transition {self.state.name} -> "
+                               f"{state.name}")
+        if state == QPState.RTR:
+            if dest_qp_num is None:
+                raise QPStateError("RTR requires dest_qp_num")
+            self.dest_qp_num = dest_qp_num
+        if state == QPState.RESET:
+            self.sq.clear()
+            self.rq.clear()
+            self.dest_qp_num = None
+        self.state = state
+        return self
+
+    # -- posting ------------------------------------------------------------
+    def post_recv(self, wr: RecvWR):
+        if self.state < QPState.INIT or self.state == QPState.ERR:
+            raise QPStateError(f"post_recv in {self.state.name}")
+        if len(self.rq) >= self.max_recv_wr:
+            raise QPStateError("recv queue full")
+        self.rq.append(wr)
+        return self
+
+    def post_send(self, wr: SendWR):
+        if self.state != QPState.RTS:
+            raise QPStateError(f"post_send in {self.state.name} "
+                               "(need RTS)")
+        if len(self.sq) >= self.max_send_wr:
+            raise QPStateError("send queue full")
+        self.sq.append(self._build_wqe(wr))
+        return self
+
+    def _build_wqe(self, wr: SendWR) -> _PostedSend:
+        flags = wqe.WQE_F_SIGNALED if wr.signaled else 0
+        if wqe.is_custom(wr.opcode):
+            flags |= wqe.WQE_F_CUSTOM
+        inline_row, nbytes, dcode, length = None, 0, 0, 0
+        if wr.opcode == wqe.IBV_WR_SEND and wr.mr is None:
+            # inline delivery is a flat byte copy (shape is not wire
+            # metadata), so auto-inline only payloads whose 1-D roundtrip
+            # is exact; inline=True forces it and documents the flatten
+            want = wr.inline is True or (
+                wr.inline is None and _flat_inlinable(wr.payload))
+            if want:
+                try:
+                    inline_row, nbytes, dcode = wqe.pack_inline(wr.payload)
+                    flags |= wqe.WQE_F_INLINE
+                    length = nbytes
+                except (ValueError, TypeError):
+                    if wr.inline is True:
+                        raise
+        if wr.remote_offsets is not None:
+            length = int(np.asarray(wr.remote_offsets).size)
+        desc = wqe.encode_wqe(
+            wr.opcode, wr_id=wr.wr_id, rkey=wr.remote_key,
+            lkey=wr.mr.lkey if wr.mr else 0,
+            remote_offset=int(np.asarray(wr.remote_offsets).ravel()[0])
+            if wr.remote_offsets is not None else 0,
+            length=length, flags=flags, dtype_code=dcode)
+        return _PostedSend(desc, wr, inline_row, nbytes, dcode)
+
+    # -- progress -----------------------------------------------------------
+    def flush(self):
+        """Ring the doorbell: hand the posted send queue to the transport
+        (one processing pass; every queued DMA coalesces, every CQE rides
+        one batched ring write per CQ)."""
+        if self.transport is None:
+            raise QPStateError("QP not attached to a transport")
+        return self.transport.process(self)

@@ -1,0 +1,269 @@
+"""Transports: what actually moves bytes when a send queue is flushed.
+
+`LoopbackTransport` connects QPs in-process (CPU tests, intra-host RPC):
+payloads change hands by reference, one-sided ops run against the peer's
+registered MRs. `MeshTransport` is the production wire: a non-inline SEND
+whose WR carries a `spec_tree` lowers onto `tx_engine.transmit` — the T1
+striped ppermute (packet spraying) — while the WQE/CQE headers stay on
+the T3 ring. Same verbs, two substrates.
+
+One `process()` pass is the unit of batching:
+  * every RDMA_READ posted in the pass coalesces into one fused gather
+    per remote region (`QPContext._flush`);
+  * every completion of the pass is published with ONE ring DMA per CQ
+    (`CompletionQueue.flush`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tx_engine
+from repro.core.descriptors import TransferPlan
+from repro.verbs import wqe
+from repro.verbs.cq import CompletionQueue
+from repro.verbs.pd import MemoryRegion, ProtectionDomain
+from repro.verbs.qp import QPState, QPStateError, QueuePair, RecvWR, SendWR
+
+
+@dataclass
+class _Cqe:
+    cq: CompletionQueue
+    desc: np.ndarray
+    data: Any = None
+
+
+class LoopbackTransport:
+    def __init__(self):
+        self.qps: dict[int, QueuePair] = {}
+
+    def attach(self, qp: QueuePair) -> QueuePair:
+        self.qps[qp.qp_num] = qp
+        qp.transport = self
+        return qp
+
+    def _peer(self, qp: QueuePair) -> QueuePair:
+        peer = self.qps.get(qp.dest_qp_num or -1)
+        if peer is None:
+            raise QPStateError(f"QP {qp.qp_num} has no attached peer "
+                               f"(dest={qp.dest_qp_num})")
+        return peer
+
+    def _move_payload(self, wr: SendWR):
+        """Hook: how a non-inline payload crosses the wire."""
+        return wr.payload
+
+    @staticmethod
+    def _remote_mr(peer: QueuePair, rkey: int) -> MemoryRegion | None:
+        mr = peer.pd.lookup(rkey)
+        if mr is None or mr.rkey != rkey:       # lkey grants no remote access
+            return None
+        return mr
+
+    @staticmethod
+    def _as_records(mr: MemoryRegion, buf):
+        rec_shape = mr.shape[1:]
+        return jnp.asarray(buf).reshape((-1,) + tuple(rec_shape))
+
+    def process(self, qp: QueuePair) -> int:
+        """Drain qp's send queue: execute, coalesce, publish. Returns the
+        number of WQEs consumed (SENDs stall in place on RNR)."""
+        if qp.state != QPState.RTS:
+            raise QPStateError(f"flush in {qp.state.name} (need RTS)")
+        cqes: list[_Cqe] = []
+        reads: list[tuple[Any, int, _Cqe | None, SendWR]] = []
+        touched = []
+
+        def touch(ctx):
+            if ctx not in touched:
+                touched.append(ctx)
+
+        def settle():
+            # resolve reads: the FIRST wait triggers one coalesced gather
+            # per remote region for everything queued this pass (Fig. 16b)
+            for ctx, dma_id, slot, wr in reads:
+                data = ctx.wait_dma_finish(dma_id)
+                if wr.mr is not None and wr.offsets is not None:
+                    qp.ctx.submit_dma("WRITE", wr.mr.name, wr.offsets,
+                                      wr.mr.record,
+                                      buf=self._as_records(wr.mr, data))
+                    touch(qp.ctx)
+                if slot is not None:
+                    slot.data = data
+            for ctx in touched:
+                ctx._flush()
+            # publish: one batched ring DMA per CQ, not per CQE
+            seen_cqs = []
+            for c in cqes:
+                c.cq.push(c.desc, data=c.data)
+                if c.cq not in seen_cqs:
+                    seen_cqs.append(c.cq)
+            for cq in seen_cqs:
+                cq.flush()
+
+        processed = 0
+        try:
+            processed = self._dispatch(qp, cqes, reads, touch)
+        finally:
+            settle()        # a mid-pass error must not drop staged work
+        return processed
+
+    def _dispatch(self, qp, cqes, reads, touch) -> int:
+        processed = 0
+        while qp.sq:
+            ps = qp.sq[0]
+            wr = ps.wr
+            if wr.opcode == wqe.IBV_WR_SEND or wqe.is_custom(wr.opcode):
+                peer = self._peer(qp)
+                if peer.state < QPState.RTR:
+                    raise QPStateError(
+                        f"peer QP {peer.qp_num} in {peer.state.name}, "
+                        "not ready to receive")
+            if wqe.is_custom(wr.opcode):
+                # escape hatch: dispatch into the peer's offload engine
+                resp = peer.pd.engine.handle_packet(
+                    wr.opcode, wr.payload, qp_id=peer.qp_num)
+                if wr.signaled:
+                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
+                        wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS, 0), resp))
+            elif wr.opcode == wqe.IBV_WR_SEND:
+                if not peer.rq:
+                    break       # RNR: leave this and later SENDs queued
+                rwr = peer.rq.popleft()
+                if ps.inline_row is not None:
+                    payload = wqe.unpack_inline(
+                        ps.inline_row, ps.inline_nbytes, ps.inline_dtype)
+                    nbytes = ps.inline_nbytes
+                else:
+                    payload = self._move_payload(wr)
+                    nbytes = 0
+                delivered = payload
+                if rwr.mr is not None:
+                    peer.ctx.submit_dma(
+                        "WRITE", rwr.mr.name, rwr.offsets, rwr.mr.record,
+                        buf=self._as_records(rwr.mr, payload))
+                    touch(peer.ctx)
+                    delivered = None     # landed in memory, not the CQE
+                cqes.append(_Cqe(peer.recv_cq, wqe.encode_cqe(
+                    wqe.IBV_WC_RECV, rwr.wr_id, wqe.IBV_WC_SUCCESS,
+                    nbytes), delivered))
+                if wr.signaled:
+                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
+                        wqe.IBV_WR_SEND, wr.wr_id, wqe.IBV_WC_SUCCESS,
+                        nbytes)))
+            elif wr.opcode == wqe.IBV_WR_RDMA_WRITE:
+                peer = self._peer(qp)
+                mr = self._remote_mr(peer, wr.remote_key)
+                if mr is None:
+                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
+                        wr.opcode, wr.wr_id, wqe.IBV_WC_ACCESS_ERR, 0)))
+                else:
+                    peer.ctx.submit_dma(
+                        "WRITE", mr.name, wr.remote_offsets, mr.record,
+                        buf=self._as_records(mr, wr.payload))
+                    touch(peer.ctx)
+                    if wr.signaled:
+                        cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
+                            wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS,
+                            int(np.asarray(wr.remote_offsets).size))))
+            elif wr.opcode == wqe.IBV_WR_RDMA_READ:
+                peer = self._peer(qp)
+                mr = self._remote_mr(peer, wr.remote_key)
+                if mr is None:
+                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
+                        wr.opcode, wr.wr_id, wqe.IBV_WC_ACCESS_ERR, 0)))
+                else:
+                    dma_id = peer.ctx.submit_dma(
+                        "READ", mr.name, wr.remote_offsets, mr.record)
+                    slot = None
+                    if wr.signaled:
+                        slot = _Cqe(qp.send_cq, wqe.encode_cqe(
+                            wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS,
+                            int(np.asarray(wr.remote_offsets).size)))
+                        cqes.append(slot)
+                    reads.append((peer.ctx, dma_id, slot, wr))
+            else:
+                raise ValueError(f"unknown opcode {wr.opcode:#x}")
+            qp.sq.popleft()
+            processed += 1
+        return processed
+
+
+class MeshTransport(LoopbackTransport):
+    """Lower payload-bearing SENDs onto the T1 TX engine: headers on the
+    ring, payload once over the fattest direct path (striped ppermute)."""
+
+    def __init__(self, plan: TransferPlan | None = None, *,
+                 staged: bool = False):
+        super().__init__()
+        self.plan = plan or TransferPlan()
+        self.staged = staged
+        self.wire_sends = 0
+
+    def _move_payload(self, wr: SendWR):
+        if wr.spec_tree is None:
+            return wr.payload
+        self.wire_sends += 1
+        fn = tx_engine.transmit_staged if self.staged else tx_engine.transmit
+        return fn(wr.payload, wr.spec_tree, self.plan)
+
+
+def connect(a: QueuePair, b: QueuePair, transport: LoopbackTransport):
+    """Run the RC handshake for a local pair: both sides RESET -> INIT ->
+    RTR(dest) -> RTS on the given transport."""
+    transport.attach(a)
+    transport.attach(b)
+    a.modify(QPState.INIT)
+    b.modify(QPState.INIT)
+    a.modify(QPState.RTR, dest_qp_num=b.qp_num)
+    b.modify(QPState.RTR, dest_qp_num=a.qp_num)
+    a.modify(QPState.RTS)
+    b.modify(QPState.RTS)
+    return a, b
+
+
+class VerbsPair:
+    """A connected client/server RC pair — the two-lines-of-setup path
+    the call sites (kvtransfer, solar, serve) build on."""
+
+    def __init__(self, pd: ProtectionDomain | None = None,
+                 transport: LoopbackTransport | None = None, *,
+                 depth: int = 512, publish_every: int = 8,
+                 max_wr: int = 256):
+        self.pd = pd or ProtectionDomain()
+        self.transport = transport or LoopbackTransport()
+        self.client_cq = CompletionQueue(depth, publish_every)
+        self.client_recv_cq = CompletionQueue(depth, publish_every)
+        self.server_cq = CompletionQueue(depth, publish_every)
+        self.server_recv_cq = CompletionQueue(depth, publish_every)
+        self.client = QueuePair(self.pd, self.client_cq, self.client_recv_cq,
+                                max_send_wr=max_wr, max_recv_wr=max_wr)
+        self.server = QueuePair(self.pd, self.server_cq, self.server_recv_cq,
+                                max_send_wr=max_wr, max_recv_wr=max_wr)
+        connect(self.client, self.server, self.transport)
+
+    def rpc(self, opcode: int, payload, wr_id: int = 0):
+        """post_send + flush + poll: one request/response round trip on
+        the client QP. Returns the completion (resp in `.data`)."""
+        self.client.post_send(SendWR(wr_id=wr_id, opcode=opcode,
+                                     payload=payload))
+        self.client.flush()
+        wcs = self.client_cq.poll()
+        assert wcs, "rpc produced no completion"
+        return wcs[-1]
+
+    def send(self, payload, *, wr_id: int = 0, spec_tree=None,
+             inline: bool | None = None):
+        """Two-sided SEND client -> server; server-side recv completion is
+        returned (post_recv is topped up automatically)."""
+        if not self.server.rq:
+            self.server.post_recv(RecvWR(wr_id=wr_id))
+        self.client.post_send(SendWR(wr_id=wr_id, payload=payload,
+                                     spec_tree=spec_tree, inline=inline))
+        self.client.flush()
+        wcs = self.server_recv_cq.poll()
+        assert wcs, "send was not delivered (RNR?)"
+        return wcs[-1]

@@ -1,0 +1,113 @@
+"""WQE/CQE wire format for the software verbs layer.
+
+Work-queue elements ride the exact 64B cacheline descriptor of
+`core/descriptors.py` (DESCRIPTOR_WIDTH int64 words) — the same format the
+T3 notification ring and the ring_pipe kernel speak, so a send queue, a
+completion queue and the notification pipe are all the *same* header
+stream (paper §3.4: one DMA-only pipe for every control message).
+
+Word layout for a verbs WQE/CQE (reusing the core word names):
+
+  W_OPCODE  verbs opcode (IBV_WR_*) or a raw custom opcode (Table 2)
+  W_SRC     wr_id
+  W_DST     remote key (rkey) for one-sided ops / dest QP number for SEND
+  W_OFFSET  remote record offset (RDMA) / first record offset
+  W_LENGTH  payload length: bytes when inline, records otherwise
+  W_TAG     local key (lkey), 0 when the payload is by-value
+  W_FLAGS   bit0 inline, bit1 signaled, bit2 custom-resp expected,
+            bits 8..11 inline payload dtype code
+  W_SEQ     CQ sequence number (stamped at publication)
+
+Inline SENDs (≤ INLINE_MAX_BYTES) pack the payload into ONE companion
+descriptor row: header + data are both 64B cachelines on the header path
+— the paper's header/payload split taken literally.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.descriptors import (DESCRIPTOR_WIDTH, W_DST, W_FLAGS,
+                                    W_LENGTH, W_OFFSET, W_OPCODE, W_SEQ,
+                                    W_SRC, W_TAG)
+
+# -- verbs opcodes (chosen clear of the core OP_* and Table-2 custom space)
+IBV_WR_SEND = 0x10
+IBV_WR_RDMA_WRITE = 0x11
+IBV_WR_RDMA_READ = 0x12
+IBV_WC_RECV = 0x18            # completion-side opcode for a landed SEND
+
+_VERB_OPCODES = {IBV_WR_SEND, IBV_WR_RDMA_WRITE, IBV_WR_RDMA_READ,
+                 IBV_WC_RECV}
+
+# -- completion status
+IBV_WC_SUCCESS = 0
+IBV_WC_RNR_ERR = 1            # receiver not ready (no posted recv WR)
+IBV_WC_ACCESS_ERR = 2         # bad lkey/rkey
+
+# -- flags
+WQE_F_INLINE = 1 << 0
+WQE_F_SIGNALED = 1 << 1
+WQE_F_CUSTOM = 1 << 2
+
+INLINE_MAX_BYTES = DESCRIPTOR_WIDTH * 8      # one 64B companion cacheline
+
+_DTYPE_CODES = {np.dtype(np.float32): 1, np.dtype(np.int32): 2,
+                np.dtype(np.int64): 3, np.dtype(np.uint8): 4,
+                np.dtype(np.float64): 5}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def is_custom(opcode: int) -> bool:
+    """Anything outside the IBV_WR_* set dispatches to the offload engine."""
+    return opcode not in _VERB_OPCODES
+
+
+def encode_wqe(opcode: int, *, wr_id: int = 0, rkey: int = 0, lkey: int = 0,
+               remote_offset: int = 0, length: int = 0,
+               flags: int = WQE_F_SIGNALED, dtype_code: int = 0) -> np.ndarray:
+    d = np.zeros((DESCRIPTOR_WIDTH,), np.int64)
+    d[W_OPCODE], d[W_SRC], d[W_DST] = opcode, wr_id, rkey
+    d[W_OFFSET], d[W_LENGTH], d[W_TAG] = remote_offset, length, lkey
+    d[W_FLAGS] = flags | (dtype_code << 8)
+    return d
+
+
+def pack_inline(payload) -> tuple[np.ndarray, int, int]:
+    """Pack a small array into one descriptor row.
+
+    Returns (row, nbytes, dtype_code). Raises ValueError above the
+    inline budget — callers fall back to the payload path.
+    """
+    arr = np.ascontiguousarray(np.asarray(payload))
+    if arr.dtype not in _DTYPE_CODES:
+        raise ValueError(f"dtype {arr.dtype} not inlinable")
+    if arr.nbytes > INLINE_MAX_BYTES:
+        raise ValueError(f"{arr.nbytes}B exceeds inline budget "
+                         f"{INLINE_MAX_BYTES}B")
+    raw = np.zeros((INLINE_MAX_BYTES,), np.uint8)
+    raw[:arr.nbytes] = np.frombuffer(arr.tobytes(), np.uint8)
+    return raw.view(np.int64).copy(), arr.nbytes, _DTYPE_CODES[arr.dtype]
+
+
+def unpack_inline(row: np.ndarray, nbytes: int, dtype_code: int) -> np.ndarray:
+    dtype = _CODE_DTYPES[dtype_code]
+    raw = np.ascontiguousarray(row, np.int64).view(np.uint8)[:nbytes]
+    return np.frombuffer(raw.tobytes(), dtype).copy()
+
+
+def cqe_fields(desc: np.ndarray) -> dict:
+    """Decode one CQ descriptor back into WorkCompletion fields."""
+    flags = int(desc[W_FLAGS])
+    return dict(opcode=int(desc[W_OPCODE]), wr_id=int(desc[W_SRC]),
+                status=int(desc[W_DST]), length=int(desc[W_LENGTH]),
+                flags=flags & 0xFF, dtype_code=(flags >> 8) & 0xF,
+                seq=int(desc[W_SEQ]))
+
+
+def encode_cqe(opcode: int, wr_id: int, status: int, length: int,
+               flags: int = 0, dtype_code: int = 0) -> np.ndarray:
+    d = np.zeros((DESCRIPTOR_WIDTH,), np.int64)
+    d[W_OPCODE], d[W_SRC], d[W_DST] = opcode, wr_id, status
+    d[W_LENGTH] = length
+    d[W_FLAGS] = flags | (dtype_code << 8)
+    return d

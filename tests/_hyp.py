@@ -1,0 +1,107 @@
+"""Offline fallback for `hypothesis`: deterministic sampled examples.
+
+This environment cannot install hypothesis, which previously broke test
+*collection* for five modules. Test files import it as
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp import given, settings, strategies as st
+
+With real hypothesis present nothing changes. Without it, `@given` runs
+the test body over a fixed number of samples drawn from a seeded RNG
+(seeded per test name, so failures reproduce), and `settings` is a
+pass-through. Only the strategy surface this suite uses is provided:
+integers, lists, sampled_from, permutations, data.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES = 8           # per-test sample count (speed over depth)
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: np.random.Generator):
+        return self._sample(rng)
+
+
+class _DataStrategy(_Strategy):
+    """`st.data()`: interactive draws inside the test body."""
+
+    def __init__(self):
+        super().__init__(None)
+
+    def example(self, rng):
+        return _DataObject(rng)
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy):
+        return strategy.example(self._rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10):
+        def sample(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+    @staticmethod
+    def permutations(seq):
+        seq = list(seq)
+        return _Strategy(
+            lambda rng: [seq[i] for i in rng.permutation(len(seq))])
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def given(*gstrategies, **kwstrategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            seed = zlib.adler32(fn.__qualname__.encode())
+            for i in range(_MAX_EXAMPLES):
+                rng = np.random.default_rng(seed + i)
+                drawn = [s.example(rng) for s in gstrategies]
+                kdrawn = {k: s.example(rng)
+                          for k, s in kwstrategies.items()}
+                fn(*args, *drawn, **kdrawn, **kwargs)
+        # hide the drawn parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def settings(*args, **kwargs):
+    if args and callable(args[0]):       # bare @settings
+        return args[0]
+    return lambda fn: fn
+
+
+st = strategies

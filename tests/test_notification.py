@@ -1,7 +1,10 @@
 """Property tests for the T3 SPSC notification ring (paper §3.4 protocol)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline rig: sampled fallback
+    from _hyp import given, settings, st
 
 from repro.core.notification import DoorbellQueue, Ring, RingFullError
 

@@ -10,6 +10,9 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# every test here spawns an 8-fake-device subprocess: tier-1 slow set
+pytestmark = pytest.mark.slow
+
 
 def run_sharded(body: str, timeout=600):
     prog = textwrap.dedent("""

@@ -9,6 +9,10 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# end-to-end train->checkpoint->serve + subprocess probes: tier-1 slow set
+pytestmark = pytest.mark.slow
 
 from repro.configs.base import get_config, reduced
 from repro.models.registry import build_model

@@ -1,0 +1,208 @@
+"""repro.verbs — RC state machine, MRs, the verb set, CQ batching."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline rig: sampled fallback
+    from _hyp import given, settings, st
+
+from repro import verbs
+from repro.core.descriptors import OP_BATCH_READ
+from repro.core.offload_engine import install_batched_read
+
+
+def _mr_pair(shape=(8, 4), name="m"):
+    pair = verbs.VerbsPair()
+    mr = pair.pd.reg_mr(name, np.zeros(shape, np.float32))
+    return pair, mr
+
+
+# -- state machine -----------------------------------------------------------
+def test_rc_ladder_and_posting_rules():
+    pd = verbs.ProtectionDomain()
+    cq = verbs.CompletionQueue()
+    qp = verbs.QueuePair(pd, cq)
+    assert qp.state == verbs.QPState.RESET
+    with pytest.raises(verbs.QPStateError):
+        qp.post_send(verbs.SendWR())                 # RESET: no sends
+    with pytest.raises(verbs.QPStateError):
+        qp.post_recv(verbs.RecvWR())                 # RESET: no recvs
+    with pytest.raises(verbs.QPStateError):
+        qp.modify(verbs.QPState.RTS)                 # must climb the ladder
+    qp.modify(verbs.QPState.INIT)
+    qp.post_recv(verbs.RecvWR())                     # INIT: recvs ok
+    with pytest.raises(verbs.QPStateError):
+        qp.post_send(verbs.SendWR())                 # INIT: sends not yet
+    with pytest.raises(verbs.QPStateError):
+        qp.modify(verbs.QPState.RTR)                 # RTR needs a peer
+    qp.modify(verbs.QPState.RTR, dest_qp_num=999)
+    qp.modify(verbs.QPState.RTS)
+    # RESET drains both queues
+    qp.modify(verbs.QPState.RESET)
+    assert not qp.rq and qp.dest_qp_num is None
+
+
+def test_send_requires_receiver_ready():
+    pd = verbs.ProtectionDomain()
+    t = verbs.LoopbackTransport()
+    a = verbs.QueuePair(pd, verbs.CompletionQueue())
+    b = verbs.QueuePair(pd, verbs.CompletionQueue())
+    t.attach(a)
+    t.attach(b)
+    a.modify(verbs.QPState.INIT)
+    a.modify(verbs.QPState.RTR, dest_qp_num=b.qp_num)
+    a.modify(verbs.QPState.RTS)
+    a.post_send(verbs.SendWR(payload=np.array([1], np.int64)))
+    with pytest.raises(verbs.QPStateError):          # peer still RESET
+        a.flush()
+
+
+# -- SEND: inline vs payload path -------------------------------------------
+def test_inline_send_roundtrip():
+    pair = verbs.VerbsPair()
+    sent = np.array([3, 1, 4, 1, 5], np.int32)       # 20B <= 64B: inline
+    wc = pair.send(sent, wr_id=7)
+    assert wc.opcode == verbs.IBV_WC_RECV and wc.ok
+    assert wc.length == sent.nbytes
+    np.testing.assert_array_equal(wc.data, sent)
+
+
+def test_noninline_send_roundtrip():
+    pair = verbs.VerbsPair()
+    sent = np.arange(1000, dtype=np.float32)         # 4000B: payload path
+    wc = pair.send(sent)
+    assert wc.length == 0                            # nothing rode the WQE
+    np.testing.assert_array_equal(np.asarray(wc.data), sent)
+
+
+def test_forced_inline_overflow_raises():
+    pair = verbs.VerbsPair()
+    with pytest.raises(ValueError):
+        pair.client.post_send(verbs.SendWR(
+            payload=np.zeros(100, np.float32), inline=True))
+
+
+def test_send_lands_in_posted_mr():
+    pair, mr = _mr_pair()
+    pair.server.post_recv(verbs.RecvWR(wr_id=1, mr=mr, offsets=[2]))
+    pair.client.post_send(verbs.SendWR(
+        payload=np.full((4,), 9.0, np.float32), inline=False))
+    pair.client.flush()
+    (wc,) = pair.server_recv_cq.poll()
+    assert wc.data is None                           # landed in memory
+    np.testing.assert_allclose(np.asarray(pair.pd.mr_array(mr))[2], 9.0)
+
+
+def test_rnr_stalls_then_delivers():
+    pair = verbs.VerbsPair()
+    pair.client.post_send(verbs.SendWR(payload=np.array([1], np.int64)))
+    assert pair.client.flush() == 0                  # RNR: nothing consumed
+    assert len(pair.client.sq) == 1
+    pair.server.post_recv(verbs.RecvWR(wr_id=5))
+    assert pair.client.flush() == 1
+    (wc,) = pair.server_recv_cq.poll()
+    assert wc.wr_id == 5
+
+
+# -- one-sided verbs ---------------------------------------------------------
+def test_rdma_write_then_read_same_pass():
+    pair, mr = _mr_pair()
+    pair.client.post_send(verbs.SendWR(
+        wr_id=1, opcode=verbs.IBV_WR_RDMA_WRITE, remote_key=mr.rkey,
+        remote_offsets=[1, 3], payload=np.ones((2, 4), np.float32)))
+    pair.client.post_send(verbs.SendWR(
+        wr_id=2, opcode=verbs.IBV_WR_RDMA_READ, remote_key=mr.rkey,
+        remote_offsets=[3]))
+    pair.client.flush()
+    w, r = pair.client_cq.poll()
+    assert (w.wr_id, w.ok, r.wr_id, r.ok) == (1, True, 2, True)
+    np.testing.assert_allclose(np.asarray(r.data), [[1.0] * 4])
+
+
+def test_rdma_read_lands_in_local_mr():
+    pair, remote = _mr_pair(name="remote")
+    pair.pd.engine.regions["remote"] = (
+        pair.pd.engine.regions["remote"].at[5].set(7.0))
+    local = pair.pd.reg_mr("local", np.zeros((2, 4), np.float32))
+    pair.client.post_send(verbs.SendWR(
+        opcode=verbs.IBV_WR_RDMA_READ, remote_key=remote.rkey,
+        remote_offsets=[5], mr=local, offsets=[0]))
+    pair.client.flush()
+    np.testing.assert_allclose(np.asarray(pair.pd.mr_array(local))[0], 7.0)
+
+
+def test_reads_in_one_flush_coalesce():
+    pair, mr = _mr_pair(shape=(16, 4))
+    before = pair.server.ctx.dma_launches
+    for i in range(8):
+        pair.client.post_send(verbs.SendWR(
+            wr_id=i, opcode=verbs.IBV_WR_RDMA_READ, remote_key=mr.rkey,
+            remote_offsets=[i]))
+    pair.client.flush()
+    assert pair.server.ctx.dma_launches - before == 1   # ONE fused gather
+    assert len(pair.client_cq.poll()) == 8
+
+
+def test_lkey_grants_no_remote_access():
+    pair, mr = _mr_pair()
+    for key in (mr.lkey, 0xBEEF):
+        pair.client.post_send(verbs.SendWR(
+            wr_id=9, opcode=verbs.IBV_WR_RDMA_READ, remote_key=key,
+            remote_offsets=[0]))
+        pair.client.flush()
+        (wc,) = pair.client_cq.poll()
+        assert wc.status == verbs.IBV_WC_ACCESS_ERR
+
+
+# -- custom opcode escape hatch ----------------------------------------------
+def test_custom_opcode_dispatches_to_offload_engine():
+    pair = verbs.VerbsPair()
+    region = np.arange(32, dtype=np.float32).reshape(8, 4)
+    pair.pd.reg_mr("mem", region)
+    install_batched_read(pair.pd.engine, "mem", value_size=4)
+    wc = pair.rpc(OP_BATCH_READ, np.array([1, 6], np.int32))
+    assert wc.ok
+    np.testing.assert_allclose(np.asarray(wc.data),
+                               region[[1, 6]].ravel())
+
+
+# -- completion queue batching ----------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 24))
+def test_poll_cq_batches_ring_dmas(n):
+    """n completions from one pass ride ONE ring DMA (dma_writes grows
+    per flush, not per CQE — the sublinear Fig. 15 scaling)."""
+    pair = verbs.VerbsPair()
+    cq = pair.server_recv_cq
+    w0 = cq.ring.dma_writes
+    for i in range(n):
+        pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        pair.client.post_send(verbs.SendWR(
+            payload=np.array([i], np.int64), signaled=False))
+    pair.client.flush()
+    assert cq.ring.dma_writes - w0 == 1
+    wcs = cq.poll()
+    assert [w.wr_id for w in wcs] == list(range(n))
+
+
+def test_poll_cq_respects_max_n():
+    pair = verbs.VerbsPair()
+    for i in range(6):
+        pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        pair.client.post_send(verbs.SendWR(
+            payload=np.array([i], np.int64), signaled=False))
+    pair.client.flush()
+    first = pair.server_recv_cq.poll(max_n=4)
+    rest = pair.server_recv_cq.poll()
+    assert [w.wr_id for w in first + rest] == list(range(6))
+
+
+def test_unsignaled_send_suppresses_send_cqe():
+    pair = verbs.VerbsPair()
+    pair.server.post_recv(verbs.RecvWR())
+    pair.client.post_send(verbs.SendWR(
+        payload=np.array([1], np.int64), signaled=False))
+    pair.client.flush()
+    assert pair.client_cq.poll() == []
+    assert len(pair.server_recv_cq.poll()) == 1
