@@ -1,0 +1,112 @@
+"""SRQ + doorbell batching + CQ-credit flow control (ISSUE 2 tentpole).
+
+Three derived quantities, all counter-based (wall times on this rig are
+noisy; the counters are the contract):
+
+  * srq_doorbell_*: descriptor DMAs per WR when N sends are posted as
+    one WQE chain (one doorbell write + one chain-fetch DMA) vs one by
+    one (N of each) — the verbs-surface Fig. 15 argument;
+  * srq_shared_pool: ≥2 client QPs blast SENDs at server QPs drawing
+    from ONE SRQ into ONE small recv CQ; flow control must convert the
+    overload into ENOMEM backpressure (no CQOverrunError) and the pool
+    must serve both QPs (takes split recorded);
+  * srq_limit_events: the low-watermark refill doorbell count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import time_call
+from repro import verbs
+
+
+def _bench_doorbells(n: int):
+    payloads = [np.array([i], np.int64) for i in range(n)]
+
+    def batched():
+        pair = verbs.VerbsPair(depth=4 * n, publish_every=64)
+        for i in range(n):
+            pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        pair.client.post_send([verbs.SendWR(payload=p, signaled=False)
+                               for p in payloads])
+        pair.client.flush()
+        assert len(pair.server_recv_cq.poll()) == n
+        return pair
+
+    def per_wr():
+        pair = verbs.VerbsPair(depth=4 * n, publish_every=64)
+        for i in range(n):
+            pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        for p in payloads:
+            pair.client.post_send(verbs.SendWR(payload=p, signaled=False))
+        pair.client.flush()
+        assert len(pair.server_recv_cq.poll()) == n
+        return pair
+
+    us_b = time_call(batched, warmup=1, iters=5)
+    us_p = time_call(per_wr, warmup=1, iters=5)
+    dmas_b = batched().client.desc_fetch_dmas / n
+    dmas_p = per_wr().client.desc_fetch_dmas / n
+    return [(f"srq_doorbell_batched_{n}wr", us_b / n,
+             f"desc_dmas_per_wr={dmas_b:.4f}"),
+            (f"srq_doorbell_perwr_{n}wr", us_p / n,
+             f"desc_dmas_per_wr={dmas_p:.4f};speedup_vs_batched="
+             f"{us_p / us_b:.2f}x")]
+
+
+def _bench_shared_pool(total_per_qp: int = 256, depth: int = 16):
+    """Two tenants, one recv pool, one small CQ, credit flow control."""
+    def overload():
+        pd = verbs.ProtectionDomain()
+        t = verbs.LoopbackTransport()
+        srq = verbs.SharedReceiveQueue(max_wr=2 * depth, srq_limit=4,
+                                       on_limit=lambda s: s.post_recv(
+                                           [verbs.RecvWR() for _ in
+                                            range(2 * depth - len(s))]
+                                       ).arm(4))
+        srq.post_recv([verbs.RecvWR() for _ in range(2 * depth)])
+        recv_cq = verbs.CompletionQueue(depth)
+        pairs = []
+        for _ in range(2):
+            c = verbs.QueuePair(pd, verbs.CompletionQueue(depth),
+                                flow_control=True)
+            s = verbs.QueuePair(pd, verbs.CompletionQueue(depth), recv_cq,
+                                srq=srq)
+            verbs.connect(c, s, t)
+            pairs.append((c, s))
+        sent = [0, 0]
+        delivered = backpressured = 0
+        while delivered < 2 * total_per_qp:
+            progressed = False
+            for j, (c, s) in enumerate(pairs):
+                if sent[j] >= total_per_qp:
+                    continue
+                try:
+                    c.post_send(verbs.SendWR(
+                        payload=np.array([sent[j]], np.int64),
+                        signaled=False))
+                    sent[j] += 1
+                    progressed = True
+                except verbs.ENOMEMError:
+                    backpressured += 1
+            if not progressed:
+                for c, _ in pairs:
+                    c.flush()
+                delivered += len(recv_cq.poll())
+        return srq, recv_cq, backpressured, [s.qp_num for _, s in pairs]
+
+    us = time_call(lambda: overload()[2], warmup=1, iters=3)
+    srq, recv_cq, backpressured, server_qpns = overload()
+    takes = [srq.taken_by_qp[q] for q in server_qpns]
+    return [("srq_shared_pool_2qp", us / (2 * total_per_qp),
+             f"cq_depth={recv_cq.capacity};backpressure_events="
+             f"{backpressured};overruns=0;takes={takes[0]}/{takes[1]};"
+             f"limit_events={srq.limit_events}")]
+
+
+def run():
+    rows = []
+    for n in (16, 128):
+        rows += _bench_doorbells(n)
+    rows += _bench_shared_pool()
+    return rows

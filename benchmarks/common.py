@@ -32,7 +32,7 @@ def run_sharded_probe(body: str, timeout: int = 600) -> str:
     prog = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        os.environ.pop("JAX_PLATFORMS", None)
+        os.environ["JAX_PLATFORMS"] = "cpu"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_mesh

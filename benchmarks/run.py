@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_solar",          # Fig 17
     "benchmarks.bench_kvtransfer",     # Fig 18
     "benchmarks.bench_verbs",          # §4 verbs-layer overhead
+    "benchmarks.bench_srq",            # SRQ / doorbell batching / CQ credit
     "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
 ]
 

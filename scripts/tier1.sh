@@ -5,6 +5,14 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# fail fast with a diagnosis instead of a wall of bare ImportErrors when
+# the repo layout / interpreter is off (wrong cwd, broken venv, ...)
+if ! python -c "import repro" 2>/dev/null; then
+    echo "tier1.sh: cannot 'import repro' with PYTHONPATH=$PYTHONPATH" >&2
+    echo "  - run from the repo root (src/repro must exist: $(ls -d src/repro 2>/dev/null || echo MISSING))" >&2
+    echo "  - or check 'python' resolves to the project interpreter: $(command -v python)" >&2
+    exit 2
+fi
 if [[ "${1:-}" == "--smoke" ]]; then
     exec python -m pytest -x -q -m "not slow" "${@:2}"
 fi

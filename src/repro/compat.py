@@ -1,0 +1,54 @@
+"""JAX version compatibility shims.
+
+The repo pins no JAX version; the CI rig runs 0.4.37 while dev machines
+may run >= 0.6. Two API gaps matter here:
+
+  * ``jax.shard_map`` only exists on new JAX; 0.4.x spells it
+    ``jax.experimental.shard_map.shard_map`` and calls the replication
+    check ``check_rep`` instead of ``check_vma``;
+  * ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+    ``jax.make_mesh``) does not exist on 0.4.x — see
+    ``repro.launch.mesh.make_mesh``, which builds on `HAS_AXIS_TYPE`.
+
+Every module that shard_maps imports `shard_map` from here instead of
+reaching for ``jax.shard_map`` directly. Keep it that way: a bare
+``jax.shard_map`` call is the single most common way to break the
+pinned-0.4.x tier-1 suite.
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on
+    0.4.x (where the kwarg is ``check_rep``). Keyword-only, matching the
+    new-JAX calling convention used across this repo."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict: 0.4.x wraps the
+    per-device properties in a one-element list, newer JAX returns the
+    dict directly."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis inside shard_map.
+    ``lax.axis_size`` is new-JAX only; 0.4.x reads the axis frame."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax import core
+    frame = core.axis_frame(axis_name)   # int on 0.4.37, frame before that
+    return frame if isinstance(frame, int) else frame.size

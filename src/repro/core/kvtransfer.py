@@ -53,8 +53,13 @@ class KVTransferEngine:
         self.model = model
         self.plan = plan or TransferPlan()
         self.spec_tree = model.cache_specs(batch, seq_len)
+        # decode-side landing buffers come from a shared pool (SRQ) and
+        # the prefill sender runs under CQ-credit flow control: a slow
+        # decode pod ENOMEMs the sender instead of overrunning its CQ
+        self.srq = verbs.SharedReceiveQueue(max_wr=256)
         self.pair = verbs.VerbsPair(
-            transport=verbs.MeshTransport(self.plan), depth=256)
+            transport=verbs.MeshTransport(self.plan), depth=256,
+            srq=self.srq, flow_control=True)
         self.ring = self.pair.server_recv_cq.ring   # the header path (T3)
         self.stats = TransferStats()
         self._wr_id = 0
@@ -73,6 +78,26 @@ class KVTransferEngine:
         """FlexiNS path: headers on the CQ ring, payload via striped
         ppermute."""
         return self._send(caches, staged=False)
+
+    def transfer_many(self, cache_list):
+        """Several cache trees in ONE doorbell: the SENDs are staged as a
+        single WQE chain (one descriptor-fetch DMA for the whole batch)
+        and the decode pool absorbs them from the SRQ. Returns received
+        trees in order."""
+        self.pair.transport.staged = False
+        per = [account(c, self.plan) for c in cache_list]
+        self.stats = TransferStats(
+            n_leaves=sum(s.n_leaves for s in per),
+            payload_bytes=sum(s.payload_bytes for s in per),
+            header_bytes=sum(s.header_bytes for s in per))
+        base = self._wr_id + 1              # same sequence transfer() uses
+        self._wr_id += len(cache_list)
+        wcs = self.pair.send_many(cache_list, wr_id=base,
+                                  spec_tree=self.spec_tree, inline=False)
+        for wc in wcs:
+            assert wc.ok, f"transfer completion status {wc.status}"
+        self.pair.client_cq.poll()          # retire the send completions
+        return [wc.data for wc in wcs]
 
     def transfer_staged(self, caches):
         """Naive baseline (replicate-then-move)."""

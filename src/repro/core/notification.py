@@ -101,6 +101,13 @@ class Ring:
         self._published_tail = self.tail
         self._since_publish = 0
 
+    def free_slots(self) -> int:
+        """Slots the producer could fill right now given the TRUE consumer
+        position (not its cached credit view): the quantity verbs-level
+        flow control budgets against. Costs no DMA — in hardware this is
+        the producer's local occupancy bound, refreshed by consumption."""
+        return self.capacity - len(self)
+
     def __len__(self):
         return self.head - self.tail
 

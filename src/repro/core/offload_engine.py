@@ -116,6 +116,14 @@ class QPContext:
         self.resp = buf
         return buf
 
+    def reset(self):
+        """Drop queued/retired DMA state (QP teardown): anything not yet
+        waited on is abandoned, matching a hardware queue-pair reset."""
+        self._dma_queue.clear()
+        self._dma_done.clear()
+        self.resp = None
+        return self
+
 
 class OffloadEngine:
     def __init__(self):
@@ -136,6 +144,14 @@ class OffloadEngine:
         """Adopt an externally-owned QPContext (the verbs layer creates
         one per QueuePair) so `handle_packet` dispatches into it."""
         self._qps[qp_id] = ctx
+        return ctx
+
+    def unbind_context(self, qp_id: int):
+        """Release a QP's context (ibv_destroy_qp): queued DMAs are
+        abandoned, handler dispatch for this qp_id gets a fresh context."""
+        ctx = self._qps.pop(qp_id, None)
+        if ctx is not None:
+            ctx.reset()
         return ctx
 
     def handle_packet(self, opcode: int, packet, qp_id: int = 0):

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.descriptors import TransferPlan
 from repro.models import module as mod
 from repro.parallel import sharding
@@ -55,7 +56,7 @@ def _permute_leaf(x, spec: P, axis: str, shift: int):
     def inner(x_l):
         return lax.ppermute(x_l, axis, perm)
 
-    f = jax.shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+    f = shard_map(inner, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
     return f(x)
 
 

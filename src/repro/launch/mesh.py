@@ -1,17 +1,28 @@
 """Production meshes. A FUNCTION (never a module-level constant) so that
-importing this module never touches jax device state."""
+importing this module never touches jax device state.
+
+`make_mesh` is the version-compat entry point: ``jax.sharding.AxisType``
+(and the ``axis_types=`` kwarg) only exists on jax >= 0.6; on 0.4.x the
+plain ``jax.make_mesh(devices, axes)`` call is the whole API. Every
+module (and test subprocess snippet) builds meshes through this helper —
+never call ``jax.make_mesh(..., axis_types=...)`` directly.
+"""
 from __future__ import annotations
 
 import jax
+
+from repro.compat import HAS_AXIS_TYPE
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    if HAS_AXIS_TYPE:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,)
+                             * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape: tuple, axes: tuple):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import act_fn, linear, linear_spec
 from repro.parallel import sharding
 
@@ -94,9 +95,9 @@ def _ffn_apply_wg(params, x, act: str):
         return jnp.einsum("bsf,fd->bsd", h, wd)
 
     wg = params["gate"]["w"] if has_gate else params["up"]["w"]
-    fsp = jax.shard_map(inner, mesh=mesh,
-                        in_specs=(xspec, gspec, gspec, dspec),
-                        out_specs=xspec, check_vma=False)
+    fsp = shard_map(inner, mesh=mesh,
+                    in_specs=(xspec, gspec, gspec, dspec),
+                    out_specs=xspec, check_vma=False)
     return fsp(x, wg, params["up"]["w"], params["down"]["w"])
 
 
@@ -141,6 +142,6 @@ def _ffn_apply_sp(params, x, act: str):
 
     wg = params["gate"]["w"] if has_gate else params["up"]["w"]
     specs = (xspec, gspec, gspec, dspec)
-    fsp = jax.shard_map(inner, mesh=mesh, in_specs=specs, out_specs=xspec,
-                        check_vma=False)
+    fsp = shard_map(inner, mesh=mesh, in_specs=specs, out_specs=xspec,
+                    check_vma=False)
     return fsp(x, wg, params["up"]["w"], params["down"]["w"])

@@ -75,9 +75,9 @@ def mla_forward_sp(params, x, positions, cfg, *, q_chunk=512, kv_chunk=1024):
     out-projection psum_scatters back to the seq-sharded stream. The paper's
     'move the compressed representation, reconstruct at the consumer'
     insight applied to the training plane (EXPERIMENTS.md §Perf iter 6)."""
-    import jax
     from jax import lax
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
     from repro.models.attention import chunked_attention
 
     a = cfg.mla
@@ -145,10 +145,10 @@ def mla_forward_sp(params, x, positions, cfg, *, q_chunk=512, kv_chunk=1024):
         y = jnp.einsum("bshv,hvd->bsd", out, w_o).astype(ql_l.dtype)
         return lax.psum_scatter(y, "model", scatter_dimension=1, tiled=True)
 
-    f = jax.shard_map(inner, mesh=mesh,
-                      in_specs=(lspec, lspec, lspec, pspec, huq, huk, huv,
-                                hwo),
-                      out_specs=lspec, check_vma=False)
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(lspec, lspec, lspec, pspec, huq, huk, huv,
+                            hwo),
+                  out_specs=lspec, check_vma=False)
     return f(ql, ckv, kr, positions, params["w_uq"], params["w_uk"],
              params["w_uv"], params["w_o"])
 

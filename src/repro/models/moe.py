@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import act_fn
 from repro.models.module import Spec
 from repro.models import ffn
@@ -248,9 +249,9 @@ def _moe_a2a(params, x, w, idx, cfg):
         y = got.reshape(Bl * Sl, k, D).sum(1)
         return y.reshape(Bl, Sl, D)
 
-    f = jax.shard_map(inner, mesh=mesh,
-                      in_specs=(xspec, hspec, hspec, gspec, gspec, dspec),
-                      out_specs=xspec, check_vma=False)
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(xspec, hspec, hspec, gspec, gspec, dspec),
+                  out_specs=xspec, check_vma=False)
     x_sp = sharding.constrain(x, "batch", "kv_seq", None)
     y = f(x_sp, w.astype(x.dtype), idx, ex["gate"], ex["up"], ex["down"])
     return sharding.constrain(y, "batch", "seq", None)
@@ -324,7 +325,7 @@ def _moe_replicated(params, x, w, idx, cfg):
             y = lax.dynamic_slice_in_dim(y, i * B_shard, B_shard, axis=0)
         return y
 
-    f = jax.shard_map(inner, mesh=mesh,
-                      in_specs=(xspec, hspec, hspec, gspec, gspec, dspec),
-                      out_specs=xspec, check_vma=False)
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(xspec, hspec, hspec, gspec, gspec, dspec),
+                  out_specs=xspec, check_vma=False)
     return f(x, w.astype(x.dtype), idx, ex["gate"], ex["up"], ex["down"])

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import shard_map
 from repro.models import ffn, mla, moe, rglru, ssm
 from repro.models.attention import chunked_attention
 from repro.models.layers import (embed, embedding_spec, proj_spec, rmsnorm,
@@ -191,10 +192,10 @@ def attn_apply_sp(params, x, positions, cfg, *, q_chunk, kv_chunk,
         return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
                                     tiled=True)
 
-    f = jax.shard_map(inner, mesh=mesh,
-                      in_specs=(xspec, pspec, wq_spec, wk_spec, wk_spec,
-                                wo_spec),
-                      out_specs=xspec, check_vma=False)
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(xspec, pspec, wq_spec, wk_spec, wk_spec,
+                            wo_spec),
+                  out_specs=xspec, check_vma=False)
     y = f(x, positions, params["wq"]["w"], params["wk"]["w"],
           params["wv"]["w"], params["wo"]["w"])
     return y, None

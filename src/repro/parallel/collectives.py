@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.attention import (chunked_attention, decode_partials,
                                     finalize_partials)
+from repro.compat import shard_map
 from repro.parallel import sharding
 
 
@@ -109,8 +110,8 @@ def _context_parallel_attention(q, k, v, *, causal, window, cap, q_chunk,
                                  q_offset=off, block_skip=block_skip,
                                  sm_scale=sm_scale)
 
-    f = jax.shard_map(inner, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
-                      out_specs=qspec, check_vma=False)
+    f = shard_map(inner, mesh=mesh, in_specs=(qspec, kvspec, kvspec),
+                  out_specs=qspec, check_vma=False)
     return f(q, k, v)
 
 
@@ -181,9 +182,9 @@ def seqparallel_decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *,
         acc, l = merge_partials(acc, m, l, "model")
         return finalize_partials(acc, l).astype(q_l.dtype), kc, vc
 
-    f = jax.shard_map(inner, mesh=mesh,
-                      in_specs=(qspec, cspec, cspec, nspec, nspec, pspec),
-                      out_specs=(qspec, cspec, cspec), check_vma=False)
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(qspec, cspec, cspec, nspec, nspec, pspec),
+                  out_specs=(qspec, cspec, cspec), check_vma=False)
     if mla:
         # pass k_cache twice (second is ignored structurally but keeps the
         # shard_map signature uniform); drop the dummy on return

@@ -41,8 +41,17 @@ class ServeEngine:
         self.cfg = model.cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
+        # the engine QP draws landing buffers from a shared recv pool —
+        # an SRQ armed with a low watermark whose limit event (not a
+        # depth poll) is the refill doorbell; more engine QPs (tenants)
+        # can attach to the same pool later
+        self.srq = verbs.SharedReceiveQueue(
+            max_wr=max(256, 4 * max_batch), srq_limit=max_batch,
+            on_limit=self._refill_srq)
         self.pair = verbs.VerbsPair(depth=ring_capacity,
-                                    max_wr=max(256, 2 * max_batch))
+                                    max_wr=max(256, 2 * max_batch),
+                                    srq=self.srq)
+        self._refill_srq(self.srq)
         self.ring = self.pair.server_recv_cq.ring   # the T3 header pipe
         self.pinned_prompts: dict[int, np.ndarray] = {}   # payload table
         self.requests: dict[int, Request] = {}
@@ -63,12 +72,23 @@ class ServeEngine:
                                               length=len(prompt)))
         return rid
 
-    def _post_descriptor(self, desc: np.ndarray):
-        """Inline verbs SEND: the 64B request descriptor IS the payload
-        (unsignaled — the recv completion is the notification)."""
-        self.pair.client.post_send(verbs.SendWR(
-            wr_id=int(desc[1]), payload=np.asarray(desc, np.int64),
-            inline=True, signaled=False))
+    def _refill_srq(self, srq):
+        """SRQ limit event: top the shared pool back up to 2x batch and
+        re-arm the watermark."""
+        want = self.max_batch * 2
+        if len(srq) < want:
+            srq.post_recv([verbs.RecvWR() for _ in range(want - len(srq))])
+        srq.arm(self.max_batch)
+
+    def _post_descriptor(self, descs):
+        """Inline verbs SEND(s): each 64B request descriptor IS the
+        payload (unsignaled — the recv completion is the notification).
+        A list is staged as one WQE chain and rings ONE doorbell."""
+        if not isinstance(descs, list):
+            descs = [descs]
+        self.pair.client.post_send([
+            verbs.SendWR(wr_id=int(d[1]), payload=np.asarray(d, np.int64),
+                         inline=True, signaled=False) for d in descs])
 
     # -- engine side ----------------------------------------------------
     def _free_slot(self) -> int | None:
@@ -78,21 +98,23 @@ class ServeEngine:
         return None
 
     def _admit(self):
-        # top up recv credits, then ring the doorbell: pending WQEs (incl.
-        # RNR-stalled re-posts) deliver, CQEs land batched on the ring
-        while len(self.pair.server.rq) < self.max_batch * 2:
-            self.pair.server.post_recv(verbs.RecvWR())
+        # top up shared recv credits (the SRQ limit event normally does
+        # this; the direct call covers the cold start), then ring the
+        # doorbell: pending WQEs (incl. RNR-stalled re-posts) deliver,
+        # CQEs land batched on the ring
+        if len(self.srq) < self.max_batch:
+            self._refill_srq(self.srq)
         self.pair.client.flush()
         pending = [wc.data for wc in self.pair.server_recv_cq.poll()]
         for i, d in enumerate(pending):
             rid = int(d[1])
             slot = self._free_slot()
             if slot is None:
-                # re-post EVERY remaining drained descriptor: the verbs
-                # queues absorb the burst (paper's burst argument),
-                # nothing drops
-                for d2 in pending[i:]:
-                    self._post_descriptor(np.asarray(d2))
+                # re-post EVERY remaining drained descriptor as ONE
+                # doorbell-batched chain: the verbs queues absorb the
+                # burst (paper's burst argument), nothing drops
+                self._post_descriptor([np.asarray(d2)
+                                       for d2 in pending[i:]])
                 break
             req = self.requests[rid]
             prompt = self.pinned_prompts[rid][None, :]       # (1, P)

@@ -14,9 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import verbs
 from repro.core.descriptors import TransferPlan
-from repro.core.kvtransfer import account
+from repro.core.kvtransfer import KVTransferEngine
 from repro.serve.kvcache import PagedKVPool, pad_caches
 
 
@@ -42,14 +41,14 @@ class PDServer:
     # -- the wire ---------------------------------------------------------
     def transfer(self, caches, batch: int, seq_len: int, staged=False):
         """One verbs SEND per transfer: prefill is the client QP, decode
-        the server; headers ride the CQ ring, payload the mesh wire."""
-        spec_tree = self.model.cache_specs(batch, seq_len)
-        pair = verbs.VerbsPair(
-            transport=verbs.MeshTransport(self.plan, staged=staged))
-        stats = account(caches, self.plan)
-        wc = pair.send(caches, spec_tree=spec_tree, inline=False)
-        assert wc.ok, f"KV transfer completion status {wc.status}"
-        return wc.data, stats
+        the server; headers ride the CQ ring, payload the mesh wire.
+        Delegates to KVTransferEngine — decode-side SRQ pool + CQ-credit
+        flow control come with it, and the transfer path lives in ONE
+        place."""
+        eng = KVTransferEngine(self.model, batch, seq_len, self.plan)
+        data = eng.transfer_staged(caches) if staged else \
+            eng.transfer(caches)
+        return data, eng.stats
 
     # -- decode pod (with paged ingest) ----------------------------------
     def ingest_and_decode(self, caches, first_tokens, prefill_len: int,

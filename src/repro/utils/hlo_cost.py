@@ -20,8 +20,13 @@ _COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _SHAPE_RE = re.compile(r"^([a-z]\w*)\[([0-9,]*)\]")
 _TUPLE_SHAPES = re.compile(r"([a-z]\w*)\[([0-9,]*)\]")
+# operands may carry a type prefix ("dot(f32[8,64]{1,0} %a, ...)" on the
+# 0.4.x HLO printer) or be bare ("dot(%a, %b)" on newer XLA); the layout
+# braces can hold tiling suffixes like {1,0:T(8,128)(2,1)} on TPU
+_OPERAND = r"(?:[a-z]\w*\[[0-9,]*\](?:\{[^}]*\})?\s+)?%([\w.\-]+)"
 _DOT_RE = re.compile(
-    r"^([a-z]\w*)\[([0-9,]*)\][^=]*?\bdot\(%([\w.\-]+),\s*%([\w.\-]+)\)"
+    r"^([a-z]\w*)\[([0-9,]*)\][^=]*?\bdot\(" + _OPERAND + r",\s*"
+    + _OPERAND + r"\)"
     r".*?lhs_contracting_dims=\{([0-9,]*)\}")
 _WHILE_REF = re.compile(r"body=%?([\w.\-]+)")
 _COND_REF = re.compile(r"condition=%?([\w.\-]+)")

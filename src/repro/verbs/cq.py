@@ -46,10 +46,66 @@ class CompletionQueue:
         self._pending: list[np.ndarray] = []
         self._sideband: dict[int, Any] = {}
         self._seq = 0
+        self.destroyed = False
+        # flow control: slots reserved by not-yet-retired WRs. One pool
+        # per CQ, shared by every sender QP charging against it.
+        self.fc_reserved = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.ring.capacity
+
+    def free_slots(self) -> int:
+        """CQ credit: slots not yet claimed by a published CQE, a staged
+        CQE, or an outstanding WR's reservation. This is the quantity
+        senders charge new WRs against (QueuePair flow control); poll()
+        grows it back."""
+        return self.ring.capacity - len(self) - self.fc_reserved
+
+    def fc_reserve(self, what: str = "CQ"):
+        """Claim one slot for an outstanding WR; ENOMEM when the CQ is
+        out of credit (the sender backs off and polls)."""
+        from repro.verbs.qp import ENOMEMError
+        if self.destroyed:
+            raise ENOMEMError(f"{what} CQ destroyed")
+        if self.free_slots() < 1:
+            raise ENOMEMError(
+                f"{what} CQ credit exhausted: {self.fc_reserved} reserved"
+                f" + {len(self)} occupied of {self.ring.capacity} "
+                "(poll_cq to replenish)")
+        self.fc_reserved += 1
+
+    def fc_release(self):
+        self.fc_reserved = max(0, self.fc_reserved - 1)
+
+    # -- teardown -----------------------------------------------------------
+    def reset(self):
+        """Reclaim everything a mid-flight QP reset/destroy can orphan:
+        staged-but-unpublished CQEs, published-but-unpolled ring entries,
+        and their sideband payloads. Flow-control reservations SURVIVE a
+        reset — they are held by live senders' outstanding WRs, not by
+        CQ content, and zeroing them here would let their eventual
+        release steal credit from other tenants' reservations."""
+        self._pending.clear()
+        self._sideband.clear()
+        self.ring.consume(None)         # drop published entries
+        self.ring.force_publish()       # hand the slots back as credit
+        return self
+
+    def destroy(self):
+        """ibv_destroy_cq: reset + refuse further use (including new
+        reservations, so a released stale claim can no longer interact
+        with live credit)."""
+        self.reset()
+        self.fc_reserved = 0
+        self.destroyed = True
+        return self
 
     # -- producer (transport) side ----------------------------------------
     def push(self, cqe: np.ndarray, data=None):
         """Stage one CQE; nothing hits the ring until `flush`."""
+        if self.destroyed:
+            raise CQOverrunError("CQ destroyed")
         cqe = np.asarray(cqe, np.int64).copy()
         cqe[W_SEQ] = self._seq
         if data is not None:
@@ -66,8 +122,7 @@ class CompletionQueue:
         from repro.core.notification import RingFullError
         published = 0
         while self._pending:
-            n = min(len(self._pending),
-                    self.ring.capacity - len(self.ring))
+            n = min(len(self._pending), self.ring.free_slots())
             if n <= 0:
                 break
             batch = np.stack(self._pending[:n])
@@ -87,14 +142,15 @@ class CompletionQueue:
     def poll(self, max_n: int | None = None) -> list[WorkCompletion]:
         """ibv_poll_cq: drain up to max_n completions (0..n, never blocks).
         Drains the ring *before* flushing so a batch that previously
-        overran the ring gets its slots back and publishes now."""
+        overran the ring gets its slots back and publishes now. One
+        consumer-counter publish per poll (the CQ consumer-index
+        doorbell): this is what hands the freed slots back as credit —
+        both to the ring producer and to flow-controlled senders."""
         out = self._drain(max_n)
-        if self._pending and (max_n is None or len(out) < max_n):
-            # publish the consumer counter so the producer-side flush
-            # sees the freed slots (one extra counter DMA, only on the
-            # backlogged path)
+        if out or self._pending:
             self.ring.force_publish()
-            self.flush()
+        if self._pending and (max_n is None or len(out) < max_n):
+            self.flush()                # backlog publishes into freed slots
             out += self._drain(None if max_n is None else max_n - len(out))
         return out
 

@@ -57,6 +57,14 @@ class ProtectionDomain:
         self._by_key.pop(mr.rkey, None)
         self.engine.regions.pop(mr.name, None)
 
+    def dealloc(self):
+        """ibv_dealloc_pd: deregister every MR still keyed here (stale
+        keys then complete with IBV_WC_ACCESS_ERR, not a lookup hit)."""
+        for mr in {id(m): m for m in self._by_key.values()}.values():
+            self.engine.regions.pop(mr.name, None)
+        self._by_key.clear()
+        return self
+
     def lookup(self, key: int) -> MemoryRegion | None:
         return self._by_key.get(key)
 

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.offload_engine import QPContext
 from repro.verbs import wqe
+from repro.verbs.cq import CQOverrunError
 from repro.verbs.pd import MemoryRegion, ProtectionDomain
 
 
@@ -45,15 +46,25 @@ class QPStateError(RuntimeError):
     pass
 
 
+class ENOMEMError(RuntimeError):
+    """ibv_post_send's ENOMEM: posting would overrun the peer's CQ
+    credit. Backpressure, not corruption — poll the CQs and retry."""
+
+
 def _flat_inlinable(payload) -> bool:
     """True when the payload survives the inline flat-bytes roundtrip
-    unchanged: a plain <=1-D array (not a pytree, not multi-dim)."""
-    if payload is None or isinstance(payload, (dict, tuple)):
+    unchanged: a plain <=1-D array of a real scalar dtype. Lists are
+    rejected even when rectangular (the roundtrip returns an ndarray,
+    not a list), as are object/structured dtypes (a ragged list becomes
+    an object-dtype 1-D array that passes the ndim check but cannot be
+    reconstructed from flat bytes)."""
+    if payload is None or isinstance(payload, (dict, tuple, list)):
         return False
     try:
-        return np.asarray(payload).ndim <= 1
+        arr = np.asarray(payload)
     except Exception:
         return False
+    return arr.ndim <= 1 and arr.dtype.kind not in "OV"
 
 
 @dataclass
@@ -99,13 +110,19 @@ class _PostedSend:
     inline_row: np.ndarray | None = None
     inline_nbytes: int = 0
     inline_dtype: int = 0
+    # CQs holding a flow-control slot reservation for this WR (claimed at
+    # post time, released when the WR retires and its CQE occupies the
+    # slot for real)
+    fc_peer_cq: Any = None
+    fc_self_cq: Any = None
 
 
 class QueuePair:
     _next_qp_num = 1
 
     def __init__(self, pd: ProtectionDomain, send_cq, recv_cq=None, *,
-                 max_send_wr: int = 256, max_recv_wr: int = 256):
+                 max_send_wr: int = 256, max_recv_wr: int = 256,
+                 srq=None, flow_control: bool = False):
         self.pd = pd
         self.send_cq = send_cq
         self.recv_cq = recv_cq if recv_cq is not None else send_cq
@@ -118,6 +135,17 @@ class QueuePair:
         self.sq: deque[_PostedSend] = deque()
         self.rq: deque[RecvWR] = deque()
         self.transport = None
+        # shared recv pool: when set, this QP's recv side IS the SRQ
+        self.srq = srq
+        if srq is not None:
+            srq.attach(self)
+        # credit-based flow control: outstanding WRs are charged against
+        # the peer recv CQ's / own send CQ's free slots (see post_send)
+        self.flow_control = flow_control
+        # doorbell accounting (paper Fig. 15): one doorbell write + one
+        # WQE-chain fetch DMA per post_send CALL, however many WRs ride it
+        self.doorbell_writes = 0
+        self.desc_fetch_dmas = 0
         # the T4 context every one-sided op against this QP coalesces in
         # (bound into the engine so handle_packet dispatches into it too)
         self.ctx = pd.engine.bind_context(self.qp_num,
@@ -134,15 +162,65 @@ class QueuePair:
             if dest_qp_num is None:
                 raise QPStateError("RTR requires dest_qp_num")
             self.dest_qp_num = dest_qp_num
+        if state == QPState.ERR:
+            self._flush_err()           # ibverbs: ERR flushes posted WRs
         if state == QPState.RESET:
+            for ps in self.sq:          # hand reserved CQ credit back
+                self._fc_retire(ps)
             self.sq.clear()
             self.rq.clear()
             self.dest_qp_num = None
         self.state = state
         return self
 
+    def _flush_err(self):
+        """Retire every posted WR with an IBV_WC_WR_FLUSH_ERR completion
+        (send WRs to the send CQ, un-matched recv WRs to the recv CQ) so
+        a mid-flight reset/destroy leaks neither WRs nor CQ sideband."""
+        for ps in self.sq:
+            self._fc_retire(ps)
+            if not self.send_cq.destroyed:       # nobody left to notify
+                self.send_cq.push(wqe.encode_cqe(
+                    ps.wr.opcode, ps.wr.wr_id, wqe.IBV_WC_WR_FLUSH_ERR, 0))
+        for rwr in self.rq:
+            if not self.recv_cq.destroyed:
+                self.recv_cq.push(wqe.encode_cqe(
+                    wqe.IBV_WC_RECV, rwr.wr_id, wqe.IBV_WC_WR_FLUSH_ERR, 0))
+        self.sq.clear()
+        self.rq.clear()
+        for cq in {id(self.send_cq): self.send_cq,
+                   id(self.recv_cq): self.recv_cq}.values():
+            if cq.destroyed:
+                continue
+            try:
+                cq.flush()
+            except CQOverrunError:
+                # the consumer is behind (ring full): the FLUSH_ERR CQEs
+                # are safely staged and republish on its next poll_cq —
+                # teardown itself must not fail
+                pass
+
+    def destroy(self):
+        """ibv_destroy_qp: ERR-flush outstanding WRs, detach from the
+        transport/SRQ, release the T4 context. The CQs stay alive (they
+        may serve other QPs) — reclaiming a CQ wholesale is
+        `CompletionQueue.destroy`."""
+        if self.state != QPState.RESET:
+            self._flush_err()
+        if self.srq is not None and self in self.srq.qps:
+            self.srq.qps.remove(self)
+        if self.transport is not None:
+            self.transport.qps.pop(self.qp_num, None)
+            self.transport = None
+        self.pd.engine.unbind_context(self.qp_num)
+        self.state = QPState.ERR
+        return self
+
     # -- posting ------------------------------------------------------------
     def post_recv(self, wr: RecvWR):
+        if self.srq is not None:
+            raise QPStateError(
+                f"QP {self.qp_num} uses an SRQ; post_recv on the SRQ")
         if self.state < QPState.INIT or self.state == QPState.ERR:
             raise QPStateError(f"post_recv in {self.state.name}")
         if len(self.rq) >= self.max_recv_wr:
@@ -150,16 +228,75 @@ class QueuePair:
         self.rq.append(wr)
         return self
 
-    def post_send(self, wr: SendWR):
+    def post_send(self, wr: SendWR | list[SendWR]):
+        """Post one WR, or a LIST of WRs staged as a single WQE chain and
+        rung with one doorbell: the transport fetches the whole chain in
+        one descriptor DMA, so N-WR lists cost 1/N the doorbell traffic
+        of N single posts (the batched-doorbell win, Fig. 15)."""
+        chain = wr if isinstance(wr, list) else [wr]
+        if not chain:
+            return self
         if self.state != QPState.RTS:
             raise QPStateError(f"post_send in {self.state.name} "
                                "(need RTS)")
-        if len(self.sq) >= self.max_send_wr:
+        if len(self.sq) + len(chain) > self.max_send_wr:
             raise QPStateError("send queue full")
-        self.sq.append(self._build_wqe(wr))
+        posted = [self._build_wqe(w) for w in chain]
+        if self.flow_control:
+            self._fc_admit(posted)
+        self.sq.extend(posted)
+        self.doorbell_writes += 1
+        self.desc_fetch_dmas += 1       # whole chain rides one fetch DMA
         return self
 
+    # -- flow control --------------------------------------------------------
+    def _fc_admit(self, posted: list[_PostedSend]):
+        """Charge the chain against CQ credit before it is queued: each
+        SEND reserves a slot on the peer's recv CQ, each signaled WR one
+        on our send CQ. Reservations live on the CQ itself
+        (`CompletionQueue.fc_reserved`) so MANY sender QPs feeding one CQ
+        share one credit pool — per-sender counters would let two tenants
+        jointly over-claim it. The receiver's poll_cq frees slots and
+        thereby replenishes every sender (ENOMEM now instead of a
+        CQOverrunError later)."""
+        peer = None
+        if self.transport is not None and self.dest_qp_num is not None:
+            peer = self.transport.qps.get(self.dest_qp_num)
+        claims: list = []               # CQs charged so far (for rollback)
+        try:
+            for ps in posted:
+                if ps.wr.opcode == wqe.IBV_WR_SEND and peer is not None:
+                    peer.recv_cq.fc_reserve("peer recv")
+                    ps.fc_peer_cq = peer.recv_cq
+                    claims.append(peer.recv_cq)
+                if ps.wr.signaled:
+                    self.send_cq.fc_reserve("send")
+                    ps.fc_self_cq = self.send_cq
+                    claims.append(self.send_cq)
+        except ENOMEMError:
+            for cq in claims:           # all-or-nothing chain admission
+                cq.fc_release()
+            for ps in posted:
+                ps.fc_peer_cq = ps.fc_self_cq = None
+            raise
+
+    @staticmethod
+    def _fc_retire(ps: _PostedSend):
+        """A WR left the send queue: its CQE now occupies the CQ for real
+        (counted by occupancy), so the reservation is released."""
+        if ps.fc_peer_cq is not None:
+            ps.fc_peer_cq.fc_release()
+            ps.fc_peer_cq = None
+        if ps.fc_self_cq is not None:
+            ps.fc_self_cq.fc_release()
+            ps.fc_self_cq = None
+
     def _build_wqe(self, wr: SendWR) -> _PostedSend:
+        if wr.opcode == wqe.IBV_WR_RDMA_WRITE and wr.payload is None \
+                and wr.mr is None:
+            # reject at post time: a source-less WRITE failing mid-
+            # dispatch would wedge the head of the send queue
+            raise ValueError("RDMA_WRITE needs a payload or a source MR")
         flags = wqe.WQE_F_SIGNALED if wr.signaled else 0
         if wqe.is_custom(wr.opcode):
             flags |= wqe.WQE_F_CUSTOM

@@ -1,0 +1,82 @@
+"""Shared receive queue: one recv-WR pool feeding many QPs.
+
+FlexiNS's RX path keeps an unbounded working set per tenant only because
+every connection owns a private recv ring; multi-tenant serving wants the
+ibv SRQ model instead — all QPs of a tenant draw landing buffers from ONE
+pool, so a bursty connection cannot strand credits that an idle one is
+hoarding. Semantics follow ibverbs:
+
+  * ``post_recv`` refills the pool (any thread/owner; WRs are anonymous
+    until a SEND claims one);
+  * a QP created with ``srq=`` MUST NOT ``post_recv`` on itself — its
+    recv side is the pool (``ibv_post_recv`` on such a QP returns EINVAL);
+  * delivery order is pool-FIFO across all attached QPs, which is what
+    makes the pool fair under overload: each arriving SEND takes the
+    oldest posted buffer, whichever QP it lands on;
+  * ``srq_limit``: arming a low watermark fires ONE limit event when the
+    pool drops below it (the IBV_EVENT_SRQ_LIMIT_REACHED analogue) and
+    disarms — re-arm with ``arm()`` after refilling. The serve engine
+    uses it as its refill doorbell instead of polling pool depth.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable
+
+from repro.verbs.qp import QPStateError, RecvWR
+
+
+class SharedReceiveQueue:
+    def __init__(self, max_wr: int = 512, *, srq_limit: int = 0,
+                 on_limit: Callable[["SharedReceiveQueue"], None] | None = None):
+        self.max_wr = max_wr
+        self.srq_limit = srq_limit
+        self.on_limit = on_limit
+        self._wrs: deque[RecvWR] = deque()
+        self._armed = srq_limit > 0
+        self.limit_events = 0
+        self.qps: list = []           # attached QueuePairs (for introspection)
+        # accounting: recv WRs consumed per attached qp_num (fairness probes)
+        self.taken_by_qp: dict[int, int] = {}
+
+    # -- refill -------------------------------------------------------------
+    def post_recv(self, wr: RecvWR | list[RecvWR]):
+        wrs = wr if isinstance(wr, list) else [wr]
+        if len(self._wrs) + len(wrs) > self.max_wr:
+            raise QPStateError(
+                f"SRQ full: {len(self._wrs)}+{len(wrs)} > max_wr="
+                f"{self.max_wr}")
+        self._wrs.extend(wrs)
+        return self
+
+    def arm(self, srq_limit: int):
+        """ibv_modify_srq(IBV_SRQ_LIMIT): set the low watermark and re-arm
+        the one-shot limit event."""
+        self.srq_limit = srq_limit
+        self._armed = srq_limit > 0
+        return self
+
+    # -- transport side -----------------------------------------------------
+    def attach(self, qp) -> "SharedReceiveQueue":
+        if qp not in self.qps:
+            self.qps.append(qp)
+            self.taken_by_qp.setdefault(qp.qp_num, 0)
+        return self
+
+    def take(self, qp_num: int) -> RecvWR | None:
+        """Claim the oldest posted WR for a SEND landing on `qp_num`;
+        None means RNR (the SEND stalls, exactly like an empty per-QP rq).
+        Crossing the armed watermark fires the one-shot limit event."""
+        if not self._wrs:
+            return None
+        wr = self._wrs.popleft()
+        self.taken_by_qp[qp_num] = self.taken_by_qp.get(qp_num, 0) + 1
+        if self._armed and len(self._wrs) < self.srq_limit:
+            self._armed = False
+            self.limit_events += 1
+            if self.on_limit is not None:
+                self.on_limit(self)
+        return wr
+
+    def __len__(self):
+        return len(self._wrs)

@@ -52,9 +52,19 @@ class LoopbackTransport:
                                f"(dest={qp.dest_qp_num})")
         return peer
 
-    def _move_payload(self, wr: SendWR):
+    @staticmethod
+    def _wr_source(qp: QueuePair, wr: SendWR):
+        """By-value payload, or — per the SendWR contract — the local MR
+        records wr.mr[wr.offsets] when payload is None (gathered at send
+        time, like a NIC DMA-reading the source buffer)."""
+        if wr.payload is not None or wr.mr is None:
+            return wr.payload
+        arr = qp.pd.mr_array(wr.mr)
+        return jnp.asarray(arr)[np.asarray(wr.offsets).ravel()]
+
+    def _move_payload(self, qp: QueuePair, wr: SendWR):
         """Hook: how a non-inline payload crosses the wire."""
-        return wr.payload
+        return self._wr_source(qp, wr)
 
     @staticmethod
     def _remote_mr(peer: QueuePair, rkey: int) -> MemoryRegion | None:
@@ -116,12 +126,14 @@ class LoopbackTransport:
         while qp.sq:
             ps = qp.sq[0]
             wr = ps.wr
-            if wr.opcode == wqe.IBV_WR_SEND or wqe.is_custom(wr.opcode):
-                peer = self._peer(qp)
-                if peer.state < QPState.RTR:
-                    raise QPStateError(
-                        f"peer QP {peer.qp_num} in {peer.state.name}, "
-                        "not ready to receive")
+            # every verb targets the peer: a peer below RTR (or torn down
+            # to ERR) refuses delivery — one-sided ops included, so a
+            # late RDMA_WRITE cannot mutate a being-destroyed QP's memory
+            peer = self._peer(qp)
+            if peer.state not in (QPState.RTR, QPState.RTS):
+                raise QPStateError(
+                    f"peer QP {peer.qp_num} in {peer.state.name}, "
+                    "not ready to receive")
             if wqe.is_custom(wr.opcode):
                 # escape hatch: dispatch into the peer's offload engine
                 resp = peer.pd.engine.handle_packet(
@@ -130,15 +142,20 @@ class LoopbackTransport:
                     cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
                         wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS, 0), resp))
             elif wr.opcode == wqe.IBV_WR_SEND:
-                if not peer.rq:
+                # recv side: the shared pool when the peer attached an
+                # SRQ (pool-FIFO across every attached QP), else its rq
+                if peer.srq is not None:
+                    rwr = peer.srq.take(peer.qp_num)
+                else:
+                    rwr = peer.rq.popleft() if peer.rq else None
+                if rwr is None:
                     break       # RNR: leave this and later SENDs queued
-                rwr = peer.rq.popleft()
                 if ps.inline_row is not None:
                     payload = wqe.unpack_inline(
                         ps.inline_row, ps.inline_nbytes, ps.inline_dtype)
                     nbytes = ps.inline_nbytes
                 else:
-                    payload = self._move_payload(wr)
+                    payload = self._move_payload(qp, wr)
                     nbytes = 0
                 delivered = payload
                 if rwr.mr is not None:
@@ -155,7 +172,6 @@ class LoopbackTransport:
                         wqe.IBV_WR_SEND, wr.wr_id, wqe.IBV_WC_SUCCESS,
                         nbytes)))
             elif wr.opcode == wqe.IBV_WR_RDMA_WRITE:
-                peer = self._peer(qp)
                 mr = self._remote_mr(peer, wr.remote_key)
                 if mr is None:
                     cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
@@ -163,14 +179,13 @@ class LoopbackTransport:
                 else:
                     peer.ctx.submit_dma(
                         "WRITE", mr.name, wr.remote_offsets, mr.record,
-                        buf=self._as_records(mr, wr.payload))
+                        buf=self._as_records(mr, self._wr_source(qp, wr)))
                     touch(peer.ctx)
                     if wr.signaled:
                         cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
                             wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS,
                             int(np.asarray(wr.remote_offsets).size))))
             elif wr.opcode == wqe.IBV_WR_RDMA_READ:
-                peer = self._peer(qp)
                 mr = self._remote_mr(peer, wr.remote_key)
                 if mr is None:
                     cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
@@ -188,6 +203,7 @@ class LoopbackTransport:
             else:
                 raise ValueError(f"unknown opcode {wr.opcode:#x}")
             qp.sq.popleft()
+            qp._fc_retire(ps)   # reservation becomes real CQ occupancy
             processed += 1
         return processed
 
@@ -203,12 +219,13 @@ class MeshTransport(LoopbackTransport):
         self.staged = staged
         self.wire_sends = 0
 
-    def _move_payload(self, wr: SendWR):
+    def _move_payload(self, qp: QueuePair, wr: SendWR):
+        payload = self._wr_source(qp, wr)
         if wr.spec_tree is None:
-            return wr.payload
+            return payload
         self.wire_sends += 1
         fn = tx_engine.transmit_staged if self.staged else tx_engine.transmit
-        return fn(wr.payload, wr.spec_tree, self.plan)
+        return fn(payload, wr.spec_tree, self.plan)
 
 
 def connect(a: QueuePair, b: QueuePair, transport: LoopbackTransport):
@@ -232,17 +249,20 @@ class VerbsPair:
     def __init__(self, pd: ProtectionDomain | None = None,
                  transport: LoopbackTransport | None = None, *,
                  depth: int = 512, publish_every: int = 8,
-                 max_wr: int = 256):
+                 max_wr: int = 256, srq=None, flow_control: bool = False):
         self.pd = pd or ProtectionDomain()
         self.transport = transport or LoopbackTransport()
+        self.srq = srq                  # shared recv pool for the server QP
         self.client_cq = CompletionQueue(depth, publish_every)
         self.client_recv_cq = CompletionQueue(depth, publish_every)
         self.server_cq = CompletionQueue(depth, publish_every)
         self.server_recv_cq = CompletionQueue(depth, publish_every)
         self.client = QueuePair(self.pd, self.client_cq, self.client_recv_cq,
-                                max_send_wr=max_wr, max_recv_wr=max_wr)
+                                max_send_wr=max_wr, max_recv_wr=max_wr,
+                                flow_control=flow_control)
         self.server = QueuePair(self.pd, self.server_cq, self.server_recv_cq,
-                                max_send_wr=max_wr, max_recv_wr=max_wr)
+                                max_send_wr=max_wr, max_recv_wr=max_wr,
+                                srq=srq, flow_control=flow_control)
         connect(self.client, self.server, self.transport)
 
     def rpc(self, opcode: int, payload, wr_id: int = 0):
@@ -258,8 +278,12 @@ class VerbsPair:
     def send(self, payload, *, wr_id: int = 0, spec_tree=None,
              inline: bool | None = None):
         """Two-sided SEND client -> server; server-side recv completion is
-        returned (post_recv is topped up automatically)."""
-        if not self.server.rq:
+        returned (the recv side — SRQ pool or per-QP rq — is topped up
+        automatically)."""
+        if self.srq is not None:
+            if not len(self.srq):
+                self.srq.post_recv(RecvWR(wr_id=wr_id))
+        elif not self.server.rq:
             self.server.post_recv(RecvWR(wr_id=wr_id))
         self.client.post_send(SendWR(wr_id=wr_id, payload=payload,
                                      spec_tree=spec_tree, inline=inline))
@@ -267,3 +291,35 @@ class VerbsPair:
         wcs = self.server_recv_cq.poll()
         assert wcs, "send was not delivered (RNR?)"
         return wcs[-1]
+
+    def send_many(self, payloads: list, *, wr_id: int = 0, spec_tree=None,
+                  inline: bool | None = None):
+        """Doorbell-batched two-sided SENDs: the whole list is staged as
+        ONE WQE chain (one doorbell write, one descriptor-fetch DMA) and
+        the recv side is topped up to match. WRs are numbered wr_id,
+        wr_id+1, ... . Returns the recv completions in posting order."""
+        if not payloads:
+            return []
+        need = len(payloads)
+        if self.srq is not None:
+            if len(self.srq) < need:
+                self.srq.post_recv([RecvWR(wr_id=wr_id + i) for i in
+                                    range(len(self.srq), need)])
+        else:
+            while len(self.server.rq) < need:
+                self.server.post_recv(
+                    RecvWR(wr_id=wr_id + len(self.server.rq)))
+        self.client.post_send([SendWR(wr_id=wr_id + i, payload=p,
+                                      spec_tree=spec_tree, inline=inline)
+                               for i, p in enumerate(payloads)])
+        self.client.flush()
+        # a batch can outsize the CQ ring: each poll republishes one
+        # ring's worth of staged backlog, so drain until dry
+        wcs = self.server_recv_cq.poll()
+        while len(wcs) < need:
+            more = self.server_recv_cq.poll()
+            if not more:
+                break
+            wcs += more
+        assert len(wcs) == need, f"{len(wcs)}/{need} delivered (RNR?)"
+        return wcs

@@ -43,6 +43,7 @@ _VERB_OPCODES = {IBV_WR_SEND, IBV_WR_RDMA_WRITE, IBV_WR_RDMA_READ,
 IBV_WC_SUCCESS = 0
 IBV_WC_RNR_ERR = 1            # receiver not ready (no posted recv WR)
 IBV_WC_ACCESS_ERR = 2         # bad lkey/rkey
+IBV_WC_WR_FLUSH_ERR = 3       # WR flushed by QP teardown / ERR transition
 
 # -- flags
 WQE_F_INLINE = 1 << 0

@@ -10,22 +10,23 @@ def test_compressed_psum_accuracy_and_wire_bytes():
     prog = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        os.environ.pop("JAX_PLATFORMS", None)
+        os.environ["JAX_PLATFORMS"] = "cpu"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
+        from repro.launch.mesh import make_mesh
         from repro.parallel.compress import compressed_psum_mean
         from repro.utils import hlo_cost
 
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("d",))
         F = 4096
         x = jax.random.normal(jax.random.PRNGKey(0), (8, F))
 
         def inner(x_l):
             return compressed_psum_mean(x_l[0], "d")[None]
 
-        f = jax.shard_map(inner, mesh=mesh, in_specs=P("d", None),
-                          out_specs=P("d", None), check_vma=False)
+        f = shard_map(inner, mesh=mesh, in_specs=P("d", None),
+                      out_specs=P("d", None), check_vma=False)
         got = jax.jit(f)(x)
         exact = jnp.mean(x, axis=0)
         # every rank's result approximates the true mean

@@ -117,6 +117,27 @@ def test_pd_disagg_with_ingest_kernel():
     np.testing.assert_array_equal(t1, t2)
 
 
+def test_kvtransfer_many_one_doorbell():
+    """transfer_many ships k cache trees as ONE WQE chain: one doorbell,
+    aggregated stats, wr_ids continuing the transfer() sequence, trees
+    delivered intact."""
+    from repro.core.kvtransfer import KVTransferEngine
+    cfg, model, params = _model()
+    _, caches = model.prefill(params, jnp.ones((2, 8), jnp.int32))
+    eng = KVTransferEngine(model, 2, 8)
+    one = eng.transfer(caches)                   # wr_id 1
+    single_stats = eng.stats
+    d0 = eng.pair.client.doorbell_writes
+    outs = eng.transfer_many([caches, caches, caches])   # wr_id 2,3,4
+    assert eng.pair.client.doorbell_writes - d0 == 1
+    assert eng._wr_id == 4
+    assert eng.stats.payload_bytes == 3 * single_stats.payload_bytes
+    assert len(outs) == 3
+    for got in outs + [one]:
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b)), got, caches)
+
+
 def test_pd_quantized_transfer_close():
     """int8 wire compression: outputs may differ slightly but the first
     tokens should survive (KV quantization tolerance)."""

@@ -1,0 +1,336 @@
+"""SRQ / doorbell batching / CQ-credit flow control (ISSUE 2 tentpole):
+shared recv pools across QPs, WQE-chain post_send, ENOMEM backpressure,
+and the CQ backlog/teardown paths."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline rig: sampled fallback
+    from _hyp import given, settings, st
+
+from repro import verbs
+
+
+def _two_qp_server(depth=256, srq_max=64, flow_control=False):
+    """Two client QPs, each RC-connected to a server QP; both server QPs
+    draw recv WRs from ONE SRQ and complete into ONE recv CQ."""
+    pd = verbs.ProtectionDomain()
+    t = verbs.LoopbackTransport()
+    srq = verbs.SharedReceiveQueue(max_wr=srq_max)
+    recv_cq = verbs.CompletionQueue(depth)
+    clients, servers = [], []
+    for _ in range(2):
+        c = verbs.QueuePair(pd, verbs.CompletionQueue(depth),
+                            flow_control=flow_control)
+        s = verbs.QueuePair(pd, verbs.CompletionQueue(depth), recv_cq,
+                            srq=srq)
+        verbs.connect(c, s, t)
+        clients.append(c)
+        servers.append(s)
+    return clients, servers, srq, recv_cq
+
+
+# -- shared receive pool -----------------------------------------------------
+def test_srq_serves_two_qps_from_one_pool():
+    clients, servers, srq, recv_cq = _two_qp_server()
+    srq.post_recv([verbs.RecvWR(wr_id=i) for i in range(4)])
+    for j, c in enumerate(clients):
+        c.post_send([verbs.SendWR(payload=np.array([j], np.int64),
+                                  signaled=False),
+                     verbs.SendWR(payload=np.array([j + 10], np.int64),
+                                  signaled=False)])
+        c.flush()
+    wcs = recv_cq.poll()
+    # pool-FIFO: buffers are claimed oldest-first across both QPs
+    assert [w.wr_id for w in wcs] == [0, 1, 2, 3]
+    assert sorted(int(w.data[0]) for w in wcs) == [0, 1, 10, 11]
+    assert srq.taken_by_qp[servers[0].qp_num] == 2
+    assert srq.taken_by_qp[servers[1].qp_num] == 2
+    assert len(srq) == 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 1))
+def test_srq_fairness_under_interleaving(n, first):
+    """However two QPs interleave their sends, the pool serves them
+    first-come-first-served and neither starves the other."""
+    clients, servers, srq, recv_cq = _two_qp_server()
+    srq.post_recv([verbs.RecvWR(wr_id=i) for i in range(2 * n)])
+    for i in range(n):
+        for j in (first, 1 - first):
+            clients[j].post_send(verbs.SendWR(
+                payload=np.array([10 * i + j], np.int64), signaled=False))
+            clients[j].flush()
+    wcs = recv_cq.poll()
+    assert [w.wr_id for w in wcs] == list(range(2 * n))
+    assert srq.taken_by_qp[servers[0].qp_num] == n
+    assert srq.taken_by_qp[servers[1].qp_num] == n
+
+
+def test_srq_empty_is_rnr_not_error():
+    clients, servers, srq, recv_cq = _two_qp_server()
+    clients[0].post_send(verbs.SendWR(payload=np.array([1], np.int64),
+                                      signaled=False))
+    assert clients[0].flush() == 0           # RNR: stalls in the SQ
+    assert len(clients[0].sq) == 1
+    srq.post_recv(verbs.RecvWR(wr_id=7))
+    assert clients[0].flush() == 1
+    (wc,) = recv_cq.poll()
+    assert wc.wr_id == 7
+
+
+def test_post_recv_on_srq_qp_is_rejected():
+    clients, servers, srq, _ = _two_qp_server()
+    with pytest.raises(verbs.QPStateError):
+        servers[0].post_recv(verbs.RecvWR())
+
+
+def test_srq_limit_event_fires_once_and_rearms():
+    events = []
+    srq = verbs.SharedReceiveQueue(max_wr=16, srq_limit=2,
+                                   on_limit=events.append)
+    srq.post_recv([verbs.RecvWR(wr_id=i) for i in range(4)])
+    for _ in range(3):
+        srq.take(qp_num=1)
+    assert srq.limit_events == 1 and len(events) == 1   # one-shot
+    srq.take(qp_num=1)
+    assert srq.limit_events == 1                        # stays disarmed
+    srq.post_recv([verbs.RecvWR() for _ in range(4)])
+    srq.arm(2)
+    for _ in range(3):
+        srq.take(qp_num=1)
+    assert srq.limit_events == 2                        # re-armed
+
+
+# -- doorbell-batched post_send ----------------------------------------------
+def test_wr_list_rides_one_doorbell():
+    pair = verbs.VerbsPair()
+    n = 8
+    pair.server.post_recv(verbs.RecvWR())   # rest arrive per-chain below
+    for i in range(n - 1):
+        pair.server.post_recv(verbs.RecvWR(wr_id=i + 1))
+    d0, f0 = pair.client.doorbell_writes, pair.client.desc_fetch_dmas
+    pair.client.post_send([verbs.SendWR(payload=np.array([i], np.int64),
+                                        signaled=False) for i in range(n)])
+    assert pair.client.doorbell_writes - d0 == 1
+    assert pair.client.desc_fetch_dmas - f0 == 1        # one chain fetch
+    assert pair.client.flush() == n
+    assert len(pair.server_recv_cq.poll()) == n
+    # the per-WR baseline: n posts cost n doorbells
+    for i in range(n):
+        pair.server.post_recv(verbs.RecvWR())
+        pair.client.post_send(verbs.SendWR(payload=np.array([i], np.int64),
+                                           signaled=False))
+    assert pair.client.doorbell_writes - d0 == 1 + n
+
+
+def test_wr_chain_respects_send_queue_bound():
+    pair = verbs.VerbsPair(max_wr=4)
+    with pytest.raises(verbs.QPStateError):
+        pair.client.post_send([verbs.SendWR(payload=np.array([i], np.int64))
+                               for i in range(5)])
+    assert not pair.client.sq                 # all-or-nothing: nothing queued
+
+
+# -- CQ-credit flow control --------------------------------------------------
+def test_flow_control_enomem_then_replenished_by_poll():
+    depth = 8
+    pair = verbs.VerbsPair(depth=depth, flow_control=True,
+                           srq=verbs.SharedReceiveQueue(max_wr=64))
+    pair.srq.post_recv([verbs.RecvWR(wr_id=i) for i in range(64)])
+    for i in range(depth):
+        pair.client.post_send(verbs.SendWR(payload=np.array([i], np.int64),
+                                           signaled=False))
+    # 9th SEND would outrun the peer recv CQ's 8 slots -> backpressure
+    with pytest.raises(verbs.ENOMEMError):
+        pair.client.post_send(verbs.SendWR(payload=np.array([99], np.int64),
+                                           signaled=False))
+    pair.client.flush()
+    assert len(pair.server_recv_cq.poll()) == depth     # consumer drains
+    # poll freed the slots: the sender has credit again
+    pair.client.post_send(verbs.SendWR(payload=np.array([99], np.int64),
+                                       signaled=False))
+    pair.client.flush()
+    (wc,) = pair.server_recv_cq.poll()
+    assert int(wc.data[0]) == 99
+
+
+def test_flow_control_charges_own_send_cq_for_signaled_wrs():
+    depth = 4
+    pair = verbs.VerbsPair(depth=depth, flow_control=True)
+    mr = pair.pd.reg_mr("m", np.zeros((8, 4), np.float32))
+    for i in range(depth):
+        pair.client.post_send(verbs.SendWR(
+            wr_id=i, opcode=verbs.IBV_WR_RDMA_READ, remote_key=mr.rkey,
+            remote_offsets=[i]))
+    with pytest.raises(verbs.ENOMEMError):
+        pair.client.post_send(verbs.SendWR(
+            opcode=verbs.IBV_WR_RDMA_READ, remote_key=mr.rkey,
+            remote_offsets=[0]))
+    pair.client.flush()
+    assert len(pair.client_cq.poll()) == depth
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(2, 6), st.integers(16, 64))
+def test_overload_backpressure_instead_of_cq_overrun(depth, total):
+    """Blast `total` sends at a depth-`depth` CQ: without fc this overruns
+    (CQOverrunError); with fc the sender ENOMEMs, drains, and every send
+    eventually lands. The acceptance property of the credit loop."""
+    pair = verbs.VerbsPair(depth=depth, flow_control=True,
+                           srq=verbs.SharedReceiveQueue(max_wr=256))
+    pair.srq.post_recv([verbs.RecvWR(wr_id=i) for i in range(total)])
+    delivered, backpressured = 0, 0
+    i = 0
+    while delivered < total:
+        if i < total:
+            try:
+                pair.client.post_send(verbs.SendWR(
+                    payload=np.array([i], np.int64), signaled=False))
+                i += 1
+                continue
+            except verbs.ENOMEMError:
+                backpressured += 1
+        pair.client.flush()
+        delivered += len(pair.server_recv_cq.poll())
+    assert delivered == total
+    assert backpressured > 0                  # the credit gate engaged
+
+
+# -- CQ backlog path ---------------------------------------------------------
+def test_cq_flush_chunks_by_ring_credit():
+    """A burst larger than the ring publishes what fits and stages the
+    rest — no overrun, and poll() republishes the remainder."""
+    depth = 8
+    pair = verbs.VerbsPair(depth=depth)
+    n = 12
+    for i in range(n):
+        pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        pair.client.post_send(verbs.SendWR(payload=np.array([i], np.int64),
+                                           signaled=False))
+    pair.client.flush()
+    cq = pair.server_recv_cq
+    assert len(cq.ring) == depth              # ring full
+    assert len(cq) == n                       # 4 staged behind it
+    wcs = cq.poll()                           # drain + republish + drain
+    assert [w.wr_id for w in wcs] == list(range(n))
+    assert len(cq) == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(9, 40))
+def test_cq_backlog_republish_preserves_order(n):
+    depth = 8
+    pair = verbs.VerbsPair(depth=depth)
+    got = []
+    for i in range(n):
+        pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        pair.client.post_send(verbs.SendWR(payload=np.array([i], np.int64),
+                                           signaled=False))
+    pair.client.flush()
+    while True:
+        wcs = pair.server_recv_cq.poll()
+        if not wcs:
+            break
+        got.extend(w.wr_id for w in wcs)
+    assert got == list(range(n))
+
+
+def test_cq_overrun_raises_when_nothing_can_publish():
+    depth = 4
+    pair = verbs.VerbsPair(depth=depth)
+    def burst(k):
+        for i in range(k):
+            pair.server.post_recv(verbs.RecvWR(wr_id=i))
+            pair.client.post_send(verbs.SendWR(
+                payload=np.array([i], np.int64), signaled=False))
+        pair.client.flush()
+    burst(depth)                              # fills the ring exactly
+    with pytest.raises(verbs.CQOverrunError):
+        burst(1)                              # no credit, nothing publishes
+
+
+# -- teardown: ERR flush + CQ reclaim ---------------------------------------
+def test_qp_err_transition_flushes_outstanding_wrs():
+    pair = verbs.VerbsPair()
+    for i in range(3):                        # RNR-stalled: no recv posted
+        pair.client.post_send(verbs.SendWR(wr_id=i,
+                                           payload=np.array([i], np.int64)))
+    pair.client.flush()
+    assert len(pair.client.sq) == 3
+    pair.client.modify(verbs.QPState.ERR)
+    wcs = pair.client_cq.poll()
+    assert [w.wr_id for w in wcs] == [0, 1, 2]
+    assert all(w.status == verbs.IBV_WC_WR_FLUSH_ERR for w in wcs)
+    assert not pair.client.sq
+
+
+def test_qp_destroy_reclaims_context_and_recvs():
+    pair = verbs.VerbsPair()
+    pair.server.post_recv(verbs.RecvWR(wr_id=9))
+    engine = pair.pd.engine
+    qp_num = pair.server.qp_num
+    assert qp_num in engine._qps
+    pair.server.destroy()
+    assert qp_num not in engine._qps          # T4 context released
+    assert qp_num not in pair.transport.qps
+    (wc,) = pair.server_recv_cq.poll()
+    assert (wc.wr_id, wc.status) == (9, verbs.IBV_WC_WR_FLUSH_ERR)
+
+
+def test_destroy_with_full_cq_ring_completes_and_republishes():
+    """Teardown must not fail because the consumer is behind: with the
+    send CQ ring full of unpolled CQEs, destroy() stages the FLUSH_ERR
+    completions and they republish on the next poll."""
+    pair = verbs.VerbsPair(depth=4)
+    for i in range(4):
+        pair.server.post_recv(verbs.RecvWR(wr_id=i))
+        pair.client.post_send(verbs.SendWR(wr_id=i,
+                                           payload=np.array([i], np.int64)))
+    pair.client.flush()                       # 4 CQEs fill the ring
+    for i in range(2):                        # RNR-stalled WRs
+        pair.client.post_send(verbs.SendWR(wr_id=10 + i,
+                                           payload=np.array([i], np.int64)))
+    pair.client.flush()
+    pair.client.destroy()                     # must not raise
+    assert pair.client.state == verbs.QPState.ERR
+    assert pair.client.qp_num not in pair.pd.engine._qps
+    wcs = pair.client_cq.poll()
+    assert [(w.wr_id, w.status) for w in wcs[-2:]] == [
+        (10, verbs.IBV_WC_WR_FLUSH_ERR), (11, verbs.IBV_WC_WR_FLUSH_ERR)]
+
+
+def test_cq_reset_reclaims_pending_and_sideband():
+    cq = verbs.CompletionQueue(depth=4)
+    from repro.verbs import wqe
+    for i in range(6):                        # 4 published + 2 staged
+        cq.push(wqe.encode_cqe(verbs.IBV_WC_RECV, i, verbs.IBV_WC_SUCCESS,
+                               0), data=np.array([i]))
+    cq.flush()
+    assert len(cq.ring) == 4 and len(cq._pending) == 2
+    assert len(cq._sideband) == 6
+    cq.reset()
+    assert len(cq) == 0 and not cq._sideband
+    assert cq.free_slots() == cq.capacity     # full credit restored
+    cq.push(wqe.encode_cqe(verbs.IBV_WC_RECV, 42, verbs.IBV_WC_SUCCESS, 0))
+    cq.flush()
+    (wc,) = cq.poll()
+    assert wc.wr_id == 42                     # CQ still usable after reset
+
+    cq.destroy()
+    with pytest.raises(verbs.CQOverrunError):
+        cq.push(wqe.encode_cqe(verbs.IBV_WC_RECV, 0, 0, 0))
+
+
+def test_qp_destroy_after_cq_destroy_still_completes():
+    """Destroying the CQ first must not wedge QP teardown: the FLUSH_ERR
+    notifications have nobody to go to, but the context/transport
+    detach still happens."""
+    pair = verbs.VerbsPair()
+    pair.client.post_send(verbs.SendWR(payload=np.array([1], np.int64)))
+    pair.client.flush()                       # RNR-stalled
+    pair.client_cq.destroy()
+    pair.client.destroy()                     # must not raise
+    assert pair.client.qp_num not in pair.pd.engine._qps
+    assert pair.client.qp_num not in pair.transport.qps

@@ -76,6 +76,26 @@ def test_noninline_send_roundtrip():
     np.testing.assert_array_equal(np.asarray(wc.data), sent)
 
 
+def test_list_payloads_never_auto_inline():
+    """Regression: a list is not flat-bytes-roundtrippable (the inline
+    path would hand the receiver an ndarray; a RAGGED list becomes an
+    object-dtype 1-D array that passes an ndim check but cannot be
+    packed at all). Lists must take the payload path unchanged."""
+    from repro.verbs.qp import _flat_inlinable
+    assert not _flat_inlinable([1, 2, 3])
+    assert not _flat_inlinable([[1], [2, 3]])                # ragged
+    assert not _flat_inlinable(np.array([1, "a"], object))   # object dtype
+    assert not _flat_inlinable(np.zeros(2, dtype=[("a", "i4")]))  # structured
+    assert _flat_inlinable(np.arange(3, dtype=np.int32))
+    assert _flat_inlinable(7)
+
+    pair = verbs.VerbsPair()
+    sent = [3, 1, 4]
+    wc = pair.send(sent)
+    assert wc.length == 0                    # payload path, not the WQE
+    assert wc.data is sent                   # delivered as-is by reference
+
+
 def test_forced_inline_overflow_raises():
     pair = verbs.VerbsPair()
     with pytest.raises(ValueError):
@@ -153,6 +173,43 @@ def test_lkey_grants_no_remote_access():
         pair.client.flush()
         (wc,) = pair.client_cq.poll()
         assert wc.status == verbs.IBV_WC_ACCESS_ERR
+
+
+def test_mr_sourced_send_and_write():
+    """payload=None + mr/offsets sources the data from the local MR (the
+    SendWR contract): the transport gathers the records at send time."""
+    pair = verbs.VerbsPair()
+    src = pair.pd.reg_mr("src", np.arange(32, dtype=np.float32).reshape(8, 4))
+    dst = pair.pd.reg_mr("dst", np.zeros((8, 4), np.float32))
+    # RDMA_WRITE sourced from mr[1,3] -> remote rows 0,1
+    pair.client.post_send(verbs.SendWR(
+        opcode=verbs.IBV_WR_RDMA_WRITE, remote_key=dst.rkey,
+        remote_offsets=[0, 1], mr=src, offsets=[1, 3]))
+    pair.client.flush()
+    np.testing.assert_allclose(
+        np.asarray(pair.pd.mr_array(dst))[:2],
+        np.arange(32, dtype=np.float32).reshape(8, 4)[[1, 3]])
+    # SEND sourced from mr[2] delivers the record, not None
+    pair.server.post_recv(verbs.RecvWR())
+    pair.client.post_send(verbs.SendWR(mr=src, offsets=[2], inline=False))
+    pair.client.flush()
+    (wc,) = pair.server_recv_cq.poll()
+    np.testing.assert_allclose(np.asarray(wc.data)[0], [8.0, 9.0, 10.0, 11.0])
+    # a WRITE with no source at all is rejected at post time
+    with pytest.raises(ValueError):
+        pair.client.post_send(verbs.SendWR(
+            opcode=verbs.IBV_WR_RDMA_WRITE, remote_key=dst.rkey,
+            remote_offsets=[0]))
+
+
+def test_send_to_err_peer_refused():
+    pair = verbs.VerbsPair(srq=verbs.SharedReceiveQueue(max_wr=8))
+    pair.srq.post_recv(verbs.RecvWR())
+    pair.server.modify(verbs.QPState.ERR)
+    pair.client.post_send(verbs.SendWR(payload=np.array([1], np.int64)))
+    with pytest.raises(verbs.QPStateError):
+        pair.client.flush()
+    assert len(pair.srq) == 1            # no pool buffer consumed
 
 
 # -- custom opcode escape hatch ----------------------------------------------
