@@ -1,0 +1,149 @@
+"""ISSUE 3 tentpole proof — line-rate WQE chains.
+
+WRs/sec and device launches per WR for 1/64/4096-WR chains across three
+datapaths, batch-wise dispatch vs the retained element-at-a-time oracle
+(`vectorized=False`, the pre-vectorization behavior):
+
+  * loopback SEND   — recv claim + payload handoff + CQE per WR;
+  * RDMA_WRITE      — one-sided writes into one remote MR (the fused
+                      scatter: launches/WR is the paper's Fig. 16 axis);
+  * SRQ fan-in      — 4 client QPs blasting one shared recv pool / CQ.
+
+Counters (dma launches, ring DMAs) are the contract; wall times give the
+WRs/sec trajectory for BENCH_line_rate.json."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import verbs
+
+CHAINS = (1, 64, 4096)
+N_CLIENTS = 4              # SRQ fan-in width
+
+
+def _median_time(fn, n: int) -> float:
+    """Median wall us of fn() (one warmup for jit/op caches; fewer iters
+    for the big scalar chains, which run seconds each)."""
+    fn()
+    iters = 5 if n <= 64 else 3
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# WR lists are built ONCE per setup and re-posted each iteration: WRs are
+# immutable, and the bench times the DATAPATH (post_send WQE build,
+# dispatch, DMA, CQE publish, poll) — not python object allocation, which
+# is identical for both paths and the application's cost either way.
+
+def _send_setup(n: int, vectorized: bool):
+    srq = verbs.SharedReceiveQueue(max_wr=n + 8)
+    pair = verbs.VerbsPair(depth=n + 16, publish_every=64, max_wr=n + 8,
+                           srq=srq, vectorized=vectorized)
+    payload = np.arange(4, dtype=np.int64)
+    recvs = [verbs.RecvWR(wr_id=i) for i in range(n)]
+    wrs = [verbs.SendWR(wr_id=i, payload=payload, inline=False,
+                        signaled=False) for i in range(n)]
+
+    def once():
+        srq.post_recv(recvs)
+        pair.client.post_send(wrs)
+        pair.client.flush()
+        wcs = pair.server_recv_cq.poll()
+        assert len(wcs) == n
+        return pair
+
+    return once, pair.server, n
+
+
+def _write_setup(n: int, vectorized: bool):
+    pair = verbs.VerbsPair(depth=n + 16, publish_every=64, max_wr=n + 8,
+                           vectorized=vectorized)
+    dst = pair.pd.reg_mr("dst", np.zeros((n, 4), np.float32))
+    wrs = [verbs.SendWR(wr_id=i, opcode=verbs.IBV_WR_RDMA_WRITE,
+                        remote_key=dst.rkey, remote_offsets=[i],
+                        payload=np.full((1, 4), float(i), np.float32),
+                        signaled=False) for i in range(n)]
+
+    def once():
+        pair.client.post_send(wrs)
+        pair.client.flush()
+        return pair
+
+    return once, pair.server, n
+
+
+def _fanin_setup(n: int, vectorized: bool):
+    per = max(1, n // N_CLIENTS)
+    total = per * N_CLIENTS
+    pd = verbs.ProtectionDomain()
+    t = verbs.LoopbackTransport(vectorized=vectorized)
+    srq = verbs.SharedReceiveQueue(max_wr=total + 8)
+    recv_cq = verbs.CompletionQueue(total + 16, 64, vectorized)
+    payload = np.arange(4, dtype=np.int64)
+    recvs = [verbs.RecvWR(wr_id=i) for i in range(total)]
+    clients, chains = [], []
+    for j in range(N_CLIENTS):
+        c = verbs.QueuePair(pd, verbs.CompletionQueue(total + 16, 64,
+                                                      vectorized),
+                            max_send_wr=per + 8, vectorized=vectorized)
+        s = verbs.QueuePair(pd, verbs.CompletionQueue(total + 16, 64,
+                                                      vectorized),
+                            recv_cq, srq=srq, vectorized=vectorized)
+        verbs.connect(c, s, t)
+        clients.append(c)
+        chains.append([verbs.SendWR(wr_id=j * per + i, payload=payload,
+                                    inline=False, signaled=False)
+                       for i in range(per)])
+
+    def once():
+        srq.post_recv(recvs)
+        for c, chain in zip(clients, chains):
+            c.post_send(chain)
+        for c in clients:
+            c.flush()
+        wcs = recv_cq.poll()
+        assert len(wcs) == total
+        return total
+
+    return once, None, total
+
+
+_FAMILIES = {"send": _send_setup, "write": _write_setup,
+             "srq_fanin": _fanin_setup}
+
+
+def run():
+    rows = []
+    for fam, setup in _FAMILIES.items():
+        for n in CHAINS:
+            res = {}
+            for vectorized in (True, False):
+                once, server, total = setup(n, vectorized)
+                us = _median_time(once, n)
+                key = "vec" if vectorized else "scalar"
+                res[key] = us
+                if server is not None and fam == "write":
+                    before = server.ctx.dma_launches
+                    once()
+                    res[f"{key}_lpw"] = \
+                        (server.ctx.dma_launches - before) / total
+            # normalize by the WRs a pass actually processes (fan-in
+            # runs n-WR chains on EACH of the N_CLIENTS clients)
+            speedup = res["scalar"] / res["vec"]
+            derived = (f"total_wrs={total};"
+                       f"wrs_per_s={total / res['vec'] * 1e6:.0f};"
+                       f"scalar_wrs_per_s={total / res['scalar'] * 1e6:.0f};"
+                       f"speedup_vs_scalar={speedup:.2f}x")
+            if fam == "write":
+                derived += (f";launches_per_wr={res['vec_lpw']:.6f};"
+                            f"scalar_launches_per_wr={res['scalar_lpw']:.3f}")
+            rows.append((f"line_rate_{fam}_{n}wr", res["vec"] / total,
+                         derived))
+    return rows

@@ -1,12 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig15]
+    PYTHONPATH=src python -m benchmarks.run [--only fig15] [--json-dir .]
 
-Prints ``name,us_per_call,derived`` CSV (the brief's contract).
+Prints ``name,us_per_call,derived`` CSV (the brief's contract) and writes
+one ``BENCH_<name>.json`` per module (metrics + parsed counters) so the
+perf trajectory is tracked in-repo from PR 3 on — see scripts/bench.sh.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -20,13 +24,49 @@ MODULES = [
     "benchmarks.bench_kvtransfer",     # Fig 18
     "benchmarks.bench_verbs",          # §4 verbs-layer overhead
     "benchmarks.bench_srq",            # SRQ / doorbell batching / CQ credit
+    "benchmarks.bench_line_rate",      # ISSUE 3: batch-wise dispatch chains
     "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
 ]
+
+
+def _parse_derived(derived: str) -> dict:
+    """'a=1;b=2.5x;c=foo' -> {'a': 1.0, 'b': 2.5, 'c': 'foo'} (numbers
+    parsed where possible, trailing 'x' multipliers included)."""
+    out: dict = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v[:-1] if v.endswith("x") else v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def _write_json(json_dir: str, modname: str, rows) -> str:
+    short = modname.rsplit(".", 1)[-1].removeprefix("bench_")
+    path = os.path.join(json_dir, f"BENCH_{short}.json")
+    payload = {
+        "benchmark": short,
+        "rows": [{"name": name, "us_per_call": round(float(us), 3),
+                  "derived": _parse_derived(derived),
+                  "derived_raw": str(derived)}
+                 for name, us, derived in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="")
+    p.add_argument("--json-dir", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="where BENCH_<name>.json land (default: repo root); "
+             "'' disables JSON output")
     args = p.parse_args()
 
     import importlib
@@ -37,9 +77,13 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(modname)
-            for name, us, derived in mod.run():
+            rows = list(mod.run())
+            for name, us, derived in rows:
                 print(f"{name},{us:.2f},{derived}")
             sys.stdout.flush()
+            if args.json_dir:
+                path = _write_json(args.json_dir, modname, rows)
+                print(f"# wrote {path}")
         except Exception:
             traceback.print_exc()
             failed.append(modname)

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Run the benchmark suite and refresh the in-repo BENCH_<name>.json
+# trajectory files. Usage:
+#   scripts/bench.sh                   # every module
+#   scripts/bench.sh --only line_rate  # one module
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m benchmarks.run "$@"

@@ -49,17 +49,21 @@ class KVTransferEngine:
     verbs layer: an RC QP pair on a MeshTransport, one SEND per transfer."""
 
     def __init__(self, model, batch: int, seq_len: int,
-                 plan: TransferPlan | None = None):
+                 plan: TransferPlan | None = None, *,
+                 vectorized: bool = True):
         self.model = model
         self.plan = plan or TransferPlan()
         self.spec_tree = model.cache_specs(batch, seq_len)
         # decode-side landing buffers come from a shared pool (SRQ) and
         # the prefill sender runs under CQ-credit flow control: a slow
-        # decode pod ENOMEMs the sender instead of overrunning its CQ
+        # decode pod ENOMEMs the sender instead of overrunning its CQ;
+        # `vectorized` selects batch-wise dispatch end-to-end (WQE chain
+        # encode, ring slices, per-CQ CQE blocks) vs the scalar oracle
         self.srq = verbs.SharedReceiveQueue(max_wr=256)
         self.pair = verbs.VerbsPair(
-            transport=verbs.MeshTransport(self.plan), depth=256,
-            srq=self.srq, flow_control=True)
+            transport=verbs.MeshTransport(self.plan, vectorized=vectorized),
+            depth=256, srq=self.srq, flow_control=True,
+            vectorized=vectorized)
         self.ring = self.pair.server_recv_cq.ring   # the header path (T3)
         self.stats = TransferStats()
         self._wr_id = 0

@@ -29,13 +29,26 @@ import numpy as np
 from repro.core.descriptors import (OP_BATCH_READ, OP_LIST_TRAVERSAL)
 
 
+def dedupe_last_wins(offs: np.ndarray, vals):
+    """Sequential-retirement semantics for a fused scatter: when target
+    offsets repeat, keep only the LAST update per offset (XLA leaves the
+    order of duplicate scatter indices unspecified). Shared by every
+    layer that stacks WRITEs — `QPContext._flush` and the transport's
+    run fusion must agree bit-for-bit."""
+    if np.unique(offs).size == offs.size:
+        return offs, vals
+    _, first_rev = np.unique(offs[::-1], return_index=True)
+    keep = np.sort(offs.size - 1 - first_rev)
+    return offs[keep], vals[keep]
+
+
 @dataclass
 class DmaOp:
     op: str                     # READ | WRITE
     region: str
     offsets: np.ndarray         # element offsets into the region
     length: int                 # elements per offset
-    buf: jnp.ndarray | None = None
+    buf: object = None          # WRITE source rows (numpy or device array)
 
 
 @dataclass
@@ -46,6 +59,13 @@ class QPContext:
     _dma_queue: list = field(default_factory=list)
     _dma_done: dict = field(default_factory=dict)
     dma_launches: int = 0       # fused launches (for Fig. 16 accounting)
+    # fuse consecutive WRITEs to one region into a single scatter launch;
+    # False = one launch per WRITE (the scalar perf/bit-exactness oracle)
+    coalesce_writes: bool = True
+    # every op below this index has retired (a _flush retires ALL pending
+    # ops), so a long-lived QP's flush scans only the ops queued since —
+    # not its whole DMA history
+    _scan_from: int = 0
 
     # ---- Table 2 API ----
     def alloc_resp(self, size: int, dtype=jnp.float32):
@@ -55,10 +75,14 @@ class QPContext:
     def submit_dma(self, op: str, region: str, offsets, length: int,
                    buf=None) -> int:
         """Queue one DMA. WRITEs carry their source data in `buf`
-        (record rows matching `offsets`); READs leave it None."""
+        (record rows matching `offsets`); READs leave it None. A
+        mutable host buffer is SNAPSHOTTED at submission (the caller
+        may reuse it — Table-2 handlers loop over scratch); a device
+        array is immutable, so it stages as-is and the one device
+        conversion happens at the fused scatter, not per submission."""
         dma_id = len(self._dma_queue)
-        if buf is not None:
-            buf = jnp.asarray(buf)
+        if buf is not None and not isinstance(buf, jnp.ndarray):
+            buf = np.array(buf)
         self._dma_queue.append(
             DmaOp(op, region, np.asarray(offsets, np.int32), length, buf))
         return dma_id
@@ -69,48 +93,102 @@ class QPContext:
         return self._dma_done[dma_id]
 
     def _flush(self):
-        """Coalesce queued READs against the same region into fused
-        gathers (the batched-DMA win). Offsets are record indices;
+        """Coalesce queued DMAs against the same region into fused
+        launches (the batched-DMA win). Offsets are record indices;
         `length` is the record size in elements. Ops against one region
-        retire in submission order — a WRITE fences the read-run around
-        it, so read-after-write sees the write (RC ordering) while a
-        write-free batch of N reads still costs ONE gather."""
-        pending = [(i, d) for i, d in enumerate(self._dma_queue)
-                   if i not in self._dma_done]
+        retire in submission order — only a READ->WRITE or WRITE->READ
+        boundary fences, so read-after-write sees the write (RC
+        ordering) while a write-free batch of N reads costs ONE gather
+        and a read-free batch of N writes ONE scatter."""
+        pending = [(i, d) for i, d in enumerate(
+            self._dma_queue[self._scan_from:], start=self._scan_from)
+            if i not in self._dma_done]
         by_region: dict[str, list[tuple[int, DmaOp]]] = {}
         for i, d in pending:
             by_region.setdefault(d.region, []).append((i, d))
         for region, items in by_region.items():
-            run: list[tuple[int, DmaOp]] = []
+            reads: list[tuple[int, DmaOp]] = []
+            writes: list[tuple[int, DmaOp]] = []
 
             def gather_run():
-                if not run:
+                if not reads:
                     return
                 arr = self.engine.regions[region]
-                L = run[0][1].length
-                assert all(d.length == L for _, d in run), \
+                L = reads[0][1].length
+                assert all(d.length == L for _, d in reads), \
                     "mixed record sizes in one flush group"
-                offs = np.concatenate([d.offsets.ravel() for _, d in run])
+                offs = np.concatenate([d.offsets.ravel() for _, d in reads])
                 idx = offs[:, None].astype(np.int64) * L + np.arange(L)
                 flat = jnp.take(arr.ravel(), jnp.asarray(idx), axis=0)
                 self.dma_launches += 1
                 c = 0
-                for i, d in run:
+                for i, d in reads:
                     n = d.offsets.size
                     self._dma_done[i] = flat[c:c + n]
                     c += n
-                run.clear()
+                reads.clear()
+
+            def scatter_one(i: int, d: DmaOp):
+                arr = self.engine.regions[region]
+                self.engine.regions[region] = arr.at[d.offsets].set(d.buf)
+                self._dma_done[i] = True
+                self.dma_launches += 1
+
+            def scatter_run():
+                if not writes:
+                    return
+                if len(writes) == 1:
+                    scatter_one(*writes[0])
+                    writes.clear()
+                    return
+                arr = self.engine.regions[region]
+                rec_shape = tuple(arr.shape[1:])
+                bufs = []
+                for _, d in writes:
+                    try:
+                        # numpy-first: one host-side stack, ONE device
+                        # conversion at the scatter (a variadic device
+                        # concat over many tiny bufs costs more than the
+                        # scatter itself)
+                        bufs.append(np.asarray(d.buf).reshape(
+                            (d.offsets.size,) + rec_shape))
+                    except (TypeError, ValueError):
+                        # a broadcasting WRITE (buf rows != offsets) keeps
+                        # its own scatter; retire the fused run first so
+                        # submission order is preserved
+                        bufs = None
+                        break
+                if bufs is None:
+                    for i, d in writes:
+                        scatter_one(i, d)
+                    writes.clear()
+                    return
+                offs = np.concatenate(
+                    [d.offsets.ravel() for _, d in writes]).astype(np.int64)
+                vals = np.concatenate(bufs) if len(bufs) > 1 else bufs[0]
+                offs, vals = dedupe_last_wins(offs, vals)
+                self.engine.regions[region] = \
+                    self.engine.regions[region].at[offs].set(vals)
+                self.dma_launches += 1
+                for i, _ in writes:
+                    self._dma_done[i] = True
+                writes.clear()
 
             for i, d in items:
                 if d.op == "READ":
-                    run.append((i, d))
-                else:               # WRITE fences the pending read-run
+                    scatter_run()       # WRITE -> READ boundary fences
+                    reads.append((i, d))
+                elif self.coalesce_writes:
+                    gather_run()        # READ -> WRITE boundary fences
+                    writes.append((i, d))
+                else:                   # oracle: one launch per WRITE
                     gather_run()
-                    arr = self.engine.regions[region]
-                    self.engine.regions[region] = arr.at[d.offsets].set(d.buf)
-                    self._dma_done[i] = True
-                    self.dma_launches += 1
+                    scatter_one(i, d)
             gather_run()
+            scatter_run()
+        # advance only once everything retired: a mid-flush error leaves
+        # the survivors rescannable by the next flush instead of orphaned
+        self._scan_from = len(self._dma_queue)
 
     def submit_resp(self, buf):
         self.resp = buf
@@ -121,6 +199,7 @@ class QPContext:
         waited on is abandoned, matching a hardware queue-pair reset."""
         self._dma_queue.clear()
         self._dma_done.clear()
+        self._scan_from = 0
         self.resp = None
         return self
 
@@ -174,10 +253,11 @@ def install_batched_read(engine: OffloadEngine, region: str, value_size: int,
     def handle_batch_read(packet, ctx: QPContext):
         offsets = np.asarray(packet, np.int32)           # target offsets
         ctx.alloc_resp(offsets.size * value_size)
-        ids = [ctx.submit_dma("READ", region, np.array([o]), value_size)
-               for o in offsets]
-        parts = [ctx.wait_dma_finish(i) for i in ids]
-        ctx.submit_resp(jnp.concatenate([p.ravel() for p in parts]))
+        # ONE submit_dma carrying every offset (Listing 1's aggregation):
+        # submitting N single-offset DMAs would defeat the coalescing the
+        # opcode exists to demonstrate
+        dma_id = ctx.submit_dma("READ", region, offsets, value_size)
+        ctx.submit_resp(ctx.wait_dma_finish(dma_id).ravel())
 
     engine.register_opcode(OP_BATCH_READ, qp_id, handle_batch_read)
     return OP_BATCH_READ

@@ -35,7 +35,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 4,
-                 max_seq: int = 256, ring_capacity: int = 64):
+                 max_seq: int = 256, ring_capacity: int = 64,
+                 vectorized: bool = True):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -44,13 +45,15 @@ class ServeEngine:
         # the engine QP draws landing buffers from a shared recv pool —
         # an SRQ armed with a low watermark whose limit event (not a
         # depth poll) is the refill doorbell; more engine QPs (tenants)
-        # can attach to the same pool later
+        # can attach to the same pool later. `vectorized` selects the
+        # batch-wise verbs datapath (submit bursts ride slice-based ring
+        # writes and per-CQ CQE blocks) vs the scalar oracle.
         self.srq = verbs.SharedReceiveQueue(
             max_wr=max(256, 4 * max_batch), srq_limit=max_batch,
             on_limit=self._refill_srq)
         self.pair = verbs.VerbsPair(depth=ring_capacity,
                                     max_wr=max(256, 2 * max_batch),
-                                    srq=self.srq)
+                                    srq=self.srq, vectorized=vectorized)
         self._refill_srq(self.srq)
         self.ring = self.pair.server_recv_cq.ring   # the T3 header pipe
         self.pinned_prompts: dict[int, np.ndarray] = {}   # payload table

@@ -21,13 +21,17 @@ from repro.serve.kvcache import PagedKVPool, pad_caches
 
 class PDServer:
     def __init__(self, model, params, *, max_seq: int = 128,
-                 page_tokens: int = 16, quantize_bits: int = 0):
+                 page_tokens: int = 16, quantize_bits: int = 0,
+                 vectorized: bool = True):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.max_seq = max_seq
         self.page_tokens = page_tokens
         self.plan = TransferPlan(quantize_bits=quantize_bits)
+        # batch-wise verbs dispatch on the transfer leg (scalar oracle
+        # when False); threaded into the KVTransferEngine per transfer
+        self.vectorized = vectorized
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
 
@@ -45,7 +49,8 @@ class PDServer:
         Delegates to KVTransferEngine — decode-side SRQ pool + CQ-credit
         flow control come with it, and the transfer path lives in ONE
         place."""
-        eng = KVTransferEngine(self.model, batch, seq_len, self.plan)
+        eng = KVTransferEngine(self.model, batch, seq_len, self.plan,
+                               vectorized=self.vectorized)
         data = eng.transfer_staged(caches) if staged else \
             eng.transfer(caches)
         return data, eng.stats

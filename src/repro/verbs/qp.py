@@ -122,8 +122,12 @@ class QueuePair:
 
     def __init__(self, pd: ProtectionDomain, send_cq, recv_cq=None, *,
                  max_send_wr: int = 256, max_recv_wr: int = 256,
-                 srq=None, flow_control: bool = False):
+                 srq=None, flow_control: bool = False,
+                 vectorized: bool = True):
         self.pd = pd
+        # batch-wise WQE building + write-coalescing T4 flushes; False is
+        # the element-at-a-time oracle (tests/test_line_rate.py)
+        self.vectorized = vectorized
         self.send_cq = send_cq
         self.recv_cq = recv_cq if recv_cq is not None else send_cq
         self.max_send_wr = max_send_wr
@@ -148,8 +152,9 @@ class QueuePair:
         self.desc_fetch_dmas = 0
         # the T4 context every one-sided op against this QP coalesces in
         # (bound into the engine so handle_packet dispatches into it too)
-        self.ctx = pd.engine.bind_context(self.qp_num,
-                                          QPContext(self.qp_num, pd.engine))
+        self.ctx = pd.engine.bind_context(
+            self.qp_num, QPContext(self.qp_num, pd.engine,
+                                   coalesce_writes=vectorized))
 
     # -- state machine ------------------------------------------------------
     def modify(self, state: QPState, *, dest_qp_num: int | None = None):
@@ -241,7 +246,10 @@ class QueuePair:
                                "(need RTS)")
         if len(self.sq) + len(chain) > self.max_send_wr:
             raise QPStateError("send queue full")
-        posted = [self._build_wqe(w) for w in chain]
+        if self.vectorized and len(chain) > 1:
+            posted = self._build_wqe_chain(chain)
+        else:
+            posted = [self._build_wqe(w) for w in chain]
         if self.flow_control:
             self._fc_admit(posted)
         self.sq.extend(posted)
@@ -291,7 +299,11 @@ class QueuePair:
             ps.fc_self_cq.fc_release()
             ps.fc_self_cq = None
 
-    def _build_wqe(self, wr: SendWR) -> _PostedSend:
+    def _wqe_fields(self, wr: SendWR):
+        """Per-WR descriptor fields + inline packing (everything that is
+        inherently payload-dependent python). The descriptor encode
+        itself happens in `encode_wqe` (scalar) or `encode_wqe_batch`
+        (one call per chain)."""
         if wr.opcode == wqe.IBV_WR_RDMA_WRITE and wr.payload is None \
                 and wr.mr is None:
             # reject at post time: a source-less WRITE failing mid-
@@ -300,7 +312,7 @@ class QueuePair:
         flags = wqe.WQE_F_SIGNALED if wr.signaled else 0
         if wqe.is_custom(wr.opcode):
             flags |= wqe.WQE_F_CUSTOM
-        inline_row, nbytes, dcode, length = None, 0, 0, 0
+        inline_row, nbytes, dcode, length, roff = None, 0, 0, 0, 0
         if wr.opcode == wqe.IBV_WR_SEND and wr.mr is None:
             # inline delivery is a flat byte copy (shape is not wire
             # metadata), so auto-inline only payloads whose 1-D roundtrip
@@ -316,14 +328,36 @@ class QueuePair:
                     if wr.inline is True:
                         raise
         if wr.remote_offsets is not None:
-            length = int(np.asarray(wr.remote_offsets).size)
+            offs = np.asarray(wr.remote_offsets)
+            length = int(offs.size)
+            roff = int(offs.ravel()[0])
+        return (wr.mr.lkey if wr.mr else 0, roff, length, flags, dcode,
+                inline_row, nbytes)
+
+    def _build_wqe(self, wr: SendWR) -> _PostedSend:
+        lkey, roff, length, flags, dcode, inline_row, nbytes = \
+            self._wqe_fields(wr)
         desc = wqe.encode_wqe(
-            wr.opcode, wr_id=wr.wr_id, rkey=wr.remote_key,
-            lkey=wr.mr.lkey if wr.mr else 0,
-            remote_offset=int(np.asarray(wr.remote_offsets).ravel()[0])
-            if wr.remote_offsets is not None else 0,
-            length=length, flags=flags, dtype_code=dcode)
+            wr.opcode, wr_id=wr.wr_id, rkey=wr.remote_key, lkey=lkey,
+            remote_offset=roff, length=length, flags=flags,
+            dtype_code=dcode)
         return _PostedSend(desc, wr, inline_row, nbytes, dcode)
+
+    def _build_wqe_chain(self, chain: list[SendWR]) -> list[_PostedSend]:
+        """Stage an N-WR chain with ONE descriptor-block encode: the
+        per-WR python is only the payload-dependent field extraction."""
+        metas = [self._wqe_fields(w) for w in chain]
+        descs = wqe.encode_wqe_batch(
+            [w.opcode for w in chain],
+            wr_ids=[w.wr_id for w in chain],
+            rkeys=[w.remote_key for w in chain],
+            lkeys=[m[0] for m in metas],
+            remote_offsets=[m[1] for m in metas],
+            lengths=[m[2] for m in metas],
+            flags=[m[3] for m in metas],
+            dtype_codes=[m[4] for m in metas])
+        return [_PostedSend(descs[i], w, m[5], m[6], m[4])
+                for i, (w, m) in enumerate(zip(chain, metas))]
 
     # -- progress -----------------------------------------------------------
     def flush(self):

@@ -78,5 +78,37 @@ class SharedReceiveQueue:
                 self.on_limit(self)
         return wr
 
+    def take_many(self, qp_num: int, n: int) -> list[RecvWR]:
+        """Claim up to n oldest WRs in one batched pop (the vectorized
+        dispatch path: one call per SEND run instead of one per SEND).
+        Returns fewer than n when the pool runs dry — the caller treats
+        the shortfall as RNR, exactly like a None from `take`."""
+        if n <= 0 or not self._wrs:
+            return []
+        if self._armed and len(self._wrs) - min(n, len(self._wrs)) \
+                < self.srq_limit:
+            # the watermark may fire (and its refill callback may top the
+            # pool back up) MID-batch: fall back to sequential takes so
+            # batched and per-WR delivery stay bit-identical
+            out = []
+            while len(out) < n:
+                wr = self.take(qp_num)
+                if wr is None:
+                    break
+                out.append(wr)
+            return out
+        k = min(n, len(self._wrs))
+        out = [self._wrs.popleft() for _ in range(k)]
+        self.taken_by_qp[qp_num] = self.taken_by_qp.get(qp_num, 0) + k
+        return out
+
+    def untake(self, qp_num: int, wrs: list[RecvWR]):
+        """Return claimed-but-unused WRs to the FRONT of the pool (a
+        batched delivery failed mid-run): pool-FIFO order and the
+        per-QP accounting both end up as if they were never taken."""
+        self._wrs.extendleft(reversed(wrs))
+        self.taken_by_qp[qp_num] = \
+            self.taken_by_qp.get(qp_num, 0) - len(wrs)
+
     def __len__(self):
         return len(self._wrs)

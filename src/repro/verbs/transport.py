@@ -7,15 +7,26 @@ whose WR carries a `spec_tree` lowers onto `tx_engine.transmit` — the T1
 striped ppermute (packet spraying) — while the WQE/CQE headers stay on
 the T3 ring. Same verbs, two substrates.
 
-One `process()` pass is the unit of batching:
+One `process()` pass is the unit of batching. Dispatch is BATCH-WISE
+(FlexTOE's discipline): consecutive same-opcode WRs form a *run*, and a
+run costs O(1) python/launch overhead —
+
+  * a run of RDMA_WRITEs into one remote MR submits ONE stacked DMA;
+  * a run of SENDs into an SRQ claims its recv WRs with ONE
+    `take_many`;
   * every RDMA_READ posted in the pass coalesces into one fused gather
     per remote region (`QPContext._flush`);
-  * every completion of the pass is published with ONE ring DMA per CQ
-    (`CompletionQueue.flush`).
+  * every completion of the pass is encoded per-CQ in ONE
+    `encode_cqe_batch` and published with ONE ring DMA per CQ.
+
+`vectorized=False` keeps the element-at-a-time dispatch as the
+bit-exactness oracle (tests/test_line_rate.py) and the perf baseline
+(benchmarks/bench_line_rate.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from itertools import islice
 from typing import Any
 
 import jax.numpy as jnp
@@ -23,22 +34,52 @@ import numpy as np
 
 from repro.core import tx_engine
 from repro.core.descriptors import TransferPlan
+from repro.core.offload_engine import dedupe_last_wins
 from repro.verbs import wqe
 from repro.verbs.cq import CompletionQueue
 from repro.verbs.pd import MemoryRegion, ProtectionDomain
 from repro.verbs.qp import QPState, QPStateError, QueuePair, RecvWR, SendWR
 
 
-@dataclass
+@dataclass(slots=True)
 class _Cqe:
+    """One staged completion, field-level (the scalar oracle's staging
+    unit): its descriptor is encoded at publication time."""
     cq: CompletionQueue
-    desc: np.ndarray
+    opcode: int
+    wr_id: int
+    status: int
+    length: int
     data: Any = None
 
 
+class _CqStage:
+    """Struct-of-arrays CQE staging for ONE CQ: the vectorized pass
+    appends plain scalars (no per-CQE object) and publication is a
+    single `encode_cqe_batch` + `push_batch` of the columns."""
+    __slots__ = ("cq", "ops", "ids", "sts", "lens", "datas")
+
+    def __init__(self, cq: CompletionQueue):
+        self.cq = cq
+        self.ops: list = []
+        self.ids: list = []
+        self.sts: list = []
+        self.lens: list = []
+        self.datas: list = []
+
+    def add(self, opcode, wr_id, status, length, data=None) -> int:
+        self.ops.append(opcode)
+        self.ids.append(wr_id)
+        self.sts.append(status)
+        self.lens.append(length)
+        self.datas.append(data)
+        return len(self.datas) - 1
+
+
 class LoopbackTransport:
-    def __init__(self):
+    def __init__(self, vectorized: bool = True):
         self.qps: dict[int, QueuePair] = {}
+        self.vectorized = vectorized
 
     def attach(self, qp: QueuePair) -> QueuePair:
         self.qps[qp.qp_num] = qp
@@ -83,13 +124,28 @@ class LoopbackTransport:
         number of WQEs consumed (SENDs stall in place on RNR)."""
         if qp.state != QPState.RTS:
             raise QPStateError(f"flush in {qp.state.name} (need RTS)")
-        cqes: list[_Cqe] = []
-        reads: list[tuple[Any, int, _Cqe | None, SendWR]] = []
-        touched = []
+        vec = self.vectorized
+        cqes: list[_Cqe] = []               # scalar-oracle staging
+        stages: dict[int, _CqStage] = {}    # vectorized: columns per CQ
+        reads: list[tuple[Any, int, Any, SendWR]] = []
+        # id()-keyed so membership checks stay O(1) however many DMAs a
+        # pass queues; insertion order IS the flush order
+        touched: dict[int, Any] = {}
 
         def touch(ctx):
-            if ctx not in touched:
-                touched.append(ctx)
+            touched.setdefault(id(ctx), ctx)
+
+        if vec:
+            def stage(cq, opcode, wr_id, status, length, data=None):
+                st = stages.get(id(cq))
+                if st is None:
+                    st = stages[id(cq)] = _CqStage(cq)
+                return st, st.add(opcode, wr_id, status, length, data)
+        else:
+            def stage(cq, opcode, wr_id, status, length, data=None):
+                c = _Cqe(cq, opcode, wr_id, status, length, data)
+                cqes.append(c)
+                return c
 
         def settle():
             # resolve reads: the FIRST wait triggers one coalesced gather
@@ -102,30 +158,47 @@ class LoopbackTransport:
                                       buf=self._as_records(wr.mr, data))
                     touch(qp.ctx)
                 if slot is not None:
-                    slot.data = data
-            for ctx in touched:
+                    if vec:
+                        slot[0].datas[slot[1]] = data
+                    else:
+                        slot.data = data
+            for ctx in touched.values():
                 ctx._flush()
-            # publish: one batched ring DMA per CQ, not per CQE
-            seen_cqs = []
+            # publish: one batched ring DMA per CQ, not per CQE — and in
+            # vectorized mode one descriptor-block encode per CQ too
+            if vec:
+                for st in stages.values():
+                    st.cq.push_batch(wqe.encode_cqe_batch(
+                        st.ops, st.ids, st.sts, st.lens), st.datas)
+                    st.cq.flush()
+                return
+            groups: dict[int, list[_Cqe]] = {}
             for c in cqes:
-                c.cq.push(c.desc, data=c.data)
-                if c.cq not in seen_cqs:
-                    seen_cqs.append(c.cq)
-            for cq in seen_cqs:
+                groups.setdefault(id(c.cq), []).append(c)
+            for items in groups.values():
+                cq = items[0].cq
+                # oracle: per-element descriptor encode (the old per-CQE
+                # cost), staged once like the old stacked produce — NOT
+                # a per-CQE ring write
+                cq.push_batch(np.stack([
+                    wqe.encode_cqe(c.opcode, c.wr_id, c.status, c.length)
+                    for c in items]), [c.data for c in items])
                 cq.flush()
 
         processed = 0
         try:
-            processed = self._dispatch(qp, cqes, reads, touch)
+            processed = self._dispatch(qp, stage, reads, touch)
         finally:
             settle()        # a mid-pass error must not drop staged work
         return processed
 
-    def _dispatch(self, qp, cqes, reads, touch) -> int:
+    # -- batch-wise dispatch ------------------------------------------------
+    def _dispatch(self, qp, stage, reads, touch) -> int:
+        if not self.vectorized:
+            return self._dispatch_scalar(qp, stage, reads, touch)
         processed = 0
-        while qp.sq:
-            ps = qp.sq[0]
-            wr = ps.wr
+        sq = qp.sq
+        while sq:
             # every verb targets the peer: a peer below RTR (or torn down
             # to ERR) refuses delivery — one-sided ops included, so a
             # late RDMA_WRITE cannot mutate a being-destroyed QP's memory
@@ -134,13 +207,216 @@ class LoopbackTransport:
                 raise QPStateError(
                     f"peer QP {peer.qp_num} in {peer.state.name}, "
                     "not ready to receive")
+            op = sq[0].wr.opcode
+            run = [sq[0]]
+            if not wqe.is_custom(op):       # handlers may mutate QP state:
+                for ps in islice(sq, 1, len(sq)):   # customs never fuse
+                    if ps.wr.opcode != op:
+                        break
+                    run.append(ps)
+            if wqe.is_custom(op):
+                handled = self._run_custom(qp, peer, run[0], stage)
+            elif op == wqe.IBV_WR_SEND:
+                handled = self._run_sends(qp, peer, run, stage, touch)
+            elif op == wqe.IBV_WR_RDMA_WRITE:
+                handled = self._run_writes(qp, peer, run, stage, touch)
+            elif op == wqe.IBV_WR_RDMA_READ:
+                handled = self._run_reads(qp, peer, run, stage, reads)
+            else:
+                raise ValueError(f"unknown opcode {op:#x}")
+            for _ in range(handled):
+                qp._fc_retire(sq.popleft())  # reservation -> CQ occupancy
+            processed += handled
+            if handled < len(run):
+                break                       # RNR: SENDs stall in place
+        return processed
+
+    def _run_custom(self, qp, peer, ps, stage) -> int:
+        # escape hatch: dispatch into the peer's offload engine
+        wr = ps.wr
+        resp = peer.pd.engine.handle_packet(
+            wr.opcode, wr.payload, qp_id=peer.qp_num)
+        if wr.signaled:
+            stage(qp.send_cq, wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS, 0,
+                  resp)
+        return 1
+
+    def _run_sends(self, qp, peer, run, stage, touch) -> int:
+        """A run of SENDs claims its recv WRs in ONE batched pool pop
+        (`SRQ.take_many` / a single rq drain); a short claim is an RNR
+        stall for the remainder of the run."""
+        n = len(run)
+        if peer.srq is not None:
+            rwrs = peer.srq.take_many(peer.qp_num, n)
+        else:
+            k = min(n, len(peer.rq))
+            rwrs = [peer.rq.popleft() for _ in range(k)]
+        done = 0
+        try:
+            for ps, rwr in zip(run, rwrs):
+                wr = ps.wr
+                if ps.inline_row is not None:
+                    payload = wqe.unpack_inline(
+                        ps.inline_row, ps.inline_nbytes, ps.inline_dtype)
+                    nbytes = ps.inline_nbytes
+                else:
+                    payload = self._move_payload(qp, wr)
+                    nbytes = 0
+                delivered = payload
+                if rwr.mr is not None:
+                    peer.ctx.submit_dma(
+                        "WRITE", rwr.mr.name, rwr.offsets, rwr.mr.record,
+                        buf=self._as_records(rwr.mr, payload))
+                    touch(peer.ctx)
+                    delivered = None     # landed in memory, not the CQE
+                stage(peer.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id,
+                      wqe.IBV_WC_SUCCESS, nbytes, delivered)
+                if wr.signaled:
+                    stage(qp.send_cq, wqe.IBV_WR_SEND, wr.wr_id,
+                          wqe.IBV_WC_SUCCESS, nbytes)
+                done += 1
+        except BaseException:
+            # payload handling failed mid-run: retire exactly the WRs
+            # that delivered (their CQEs are staged; a redelivery on the
+            # next flush would duplicate them) and hand the pre-claimed
+            # recv WRs of the rest back to the FRONT of the pool — the
+            # element-at-a-time oracle can't over-claim, so neither may
+            # the batched path
+            unused = rwrs[done:]
+            if peer.srq is not None:
+                peer.srq.untake(peer.qp_num, unused)
+            else:
+                peer.rq.extendleft(reversed(unused))
+            for _ in range(done):
+                qp._fc_retire(qp.sq.popleft())
+            raise
+        return len(rwrs)
+
+    def _run_writes(self, qp, peer, run, stage, touch) -> int:
+        """Consecutive WRITEs to one remote MR fuse into ONE stacked
+        `submit_dma` (offsets concatenated, record rows stacked) — one
+        DmaOp, one scatter launch, N completions.
+
+        Each sub-run is all-or-nothing: every source is gathered and
+        reshaped BEFORE anything is submitted or any SUCCESS CQE is
+        staged, so a bad payload mid-run cannot publish a completion
+        for a write that never landed. On failure the sub-runs that DID
+        retire are popped (their CQEs are staged) and the rest stay
+        queued untouched."""
+        done = 0
+        try:
+            i = 0
+            while i < len(run):
+                rkey = run[i].wr.remote_key
+                j = i
+                while j < len(run) and run[j].wr.remote_key == rkey:
+                    j += 1
+                sub = run[i:j]
+                i = j
+                mr = self._remote_mr(peer, rkey)
+                if mr is None:
+                    for ps in sub:
+                        stage(qp.send_cq, ps.wr.opcode, ps.wr.wr_id,
+                              wqe.IBV_WC_ACCESS_ERR, 0)
+                    done += len(sub)
+                    continue
+                # fallible phase: gather every source up front.
+                # numpy-first: a variadic device concatenate over
+                # thousands of tiny operands costs more than the scatter
+                # it feeds — the ONE device conversion is submit_dma's.
+                rec_shape = tuple(mr.shape[1:])
+                srcs = [(ps, np.asarray(ps.wr.remote_offsets).ravel(),
+                         np.asarray(self._wr_source(qp, ps.wr))
+                         .reshape((-1,) + rec_shape)) for ps in sub]
+                # infallible phase: stack, submit, stage. A WR whose
+                # source rows don't match its offset count (a
+                # broadcasting WRITE) keeps its own DMA.
+                offs: list[np.ndarray] = []
+                bufs: list = []
+
+                def flush_stack():
+                    if not offs:
+                        return
+                    if len(offs) > 1:
+                        # duplicate targets across fused WRs retire
+                        # last-writer-wins, like sequential scatters
+                        o, b = dedupe_last_wins(np.concatenate(offs),
+                                                np.concatenate(bufs))
+                    else:
+                        o, b = offs[0], bufs[0]
+                    peer.ctx.submit_dma("WRITE", mr.name, o, mr.record,
+                                        buf=b)
+                    touch(peer.ctx)
+                    offs.clear()
+                    bufs.clear()
+
+                for ps, off, buf in srcs:
+                    wr = ps.wr
+                    if buf.shape[0] == off.size:
+                        offs.append(off)
+                        bufs.append(buf)
+                    else:                   # broadcasting: submit alone
+                        flush_stack()
+                        peer.ctx.submit_dma("WRITE", mr.name,
+                                            wr.remote_offsets, mr.record,
+                                            buf=buf)
+                        touch(peer.ctx)
+                    if wr.signaled:
+                        stage(qp.send_cq, wr.opcode, wr.wr_id,
+                              wqe.IBV_WC_SUCCESS, int(off.size))
+                flush_stack()
+                done += len(sub)
+        except BaseException:
+            for _ in range(done):
+                qp._fc_retire(qp.sq.popleft())
+            raise
+        return len(run)
+
+    def _run_reads(self, qp, peer, run, stage, reads) -> int:
+        done = 0
+        try:
+            for ps in run:
+                wr = ps.wr
+                mr = self._remote_mr(peer, wr.remote_key)
+                if mr is None:
+                    stage(qp.send_cq, wr.opcode, wr.wr_id,
+                          wqe.IBV_WC_ACCESS_ERR, 0)
+                    done += 1
+                    continue
+                dma_id = peer.ctx.submit_dma(
+                    "READ", mr.name, wr.remote_offsets, mr.record)
+                slot = None
+                if wr.signaled:
+                    slot = stage(qp.send_cq, wr.opcode, wr.wr_id,
+                                 wqe.IBV_WC_SUCCESS,
+                                 int(np.asarray(wr.remote_offsets).size))
+                reads.append((peer.ctx, dma_id, slot, wr))
+                done += 1
+        except BaseException:
+            # a bad WR mid-run: retire the WRs whose CQEs are staged so
+            # the next flush cannot redeliver them
+            for _ in range(done):
+                qp._fc_retire(qp.sq.popleft())
+            raise
+        return len(run)
+
+    # -- element-at-a-time dispatch (the oracle) ----------------------------
+    def _dispatch_scalar(self, qp, stage, reads, touch) -> int:
+        processed = 0
+        while qp.sq:
+            ps = qp.sq[0]
+            wr = ps.wr
+            peer = self._peer(qp)
+            if peer.state not in (QPState.RTR, QPState.RTS):
+                raise QPStateError(
+                    f"peer QP {peer.qp_num} in {peer.state.name}, "
+                    "not ready to receive")
             if wqe.is_custom(wr.opcode):
-                # escape hatch: dispatch into the peer's offload engine
                 resp = peer.pd.engine.handle_packet(
                     wr.opcode, wr.payload, qp_id=peer.qp_num)
                 if wr.signaled:
-                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
-                        wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS, 0), resp))
+                    stage(qp.send_cq, wr.opcode, wr.wr_id,
+                          wqe.IBV_WC_SUCCESS, 0, resp)
             elif wr.opcode == wqe.IBV_WR_SEND:
                 # recv side: the shared pool when the peer attached an
                 # SRQ (pool-FIFO across every attached QP), else its rq
@@ -164,41 +440,38 @@ class LoopbackTransport:
                         buf=self._as_records(rwr.mr, payload))
                     touch(peer.ctx)
                     delivered = None     # landed in memory, not the CQE
-                cqes.append(_Cqe(peer.recv_cq, wqe.encode_cqe(
-                    wqe.IBV_WC_RECV, rwr.wr_id, wqe.IBV_WC_SUCCESS,
-                    nbytes), delivered))
+                stage(peer.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id,
+                      wqe.IBV_WC_SUCCESS, nbytes, delivered)
                 if wr.signaled:
-                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
-                        wqe.IBV_WR_SEND, wr.wr_id, wqe.IBV_WC_SUCCESS,
-                        nbytes)))
+                    stage(qp.send_cq, wqe.IBV_WR_SEND, wr.wr_id,
+                          wqe.IBV_WC_SUCCESS, nbytes)
             elif wr.opcode == wqe.IBV_WR_RDMA_WRITE:
                 mr = self._remote_mr(peer, wr.remote_key)
                 if mr is None:
-                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
-                        wr.opcode, wr.wr_id, wqe.IBV_WC_ACCESS_ERR, 0)))
+                    stage(qp.send_cq, wr.opcode, wr.wr_id,
+                          wqe.IBV_WC_ACCESS_ERR, 0)
                 else:
                     peer.ctx.submit_dma(
                         "WRITE", mr.name, wr.remote_offsets, mr.record,
                         buf=self._as_records(mr, self._wr_source(qp, wr)))
                     touch(peer.ctx)
                     if wr.signaled:
-                        cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
-                            wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS,
-                            int(np.asarray(wr.remote_offsets).size))))
+                        stage(qp.send_cq, wr.opcode, wr.wr_id,
+                              wqe.IBV_WC_SUCCESS,
+                              int(np.asarray(wr.remote_offsets).size))
             elif wr.opcode == wqe.IBV_WR_RDMA_READ:
                 mr = self._remote_mr(peer, wr.remote_key)
                 if mr is None:
-                    cqes.append(_Cqe(qp.send_cq, wqe.encode_cqe(
-                        wr.opcode, wr.wr_id, wqe.IBV_WC_ACCESS_ERR, 0)))
+                    stage(qp.send_cq, wr.opcode, wr.wr_id,
+                          wqe.IBV_WC_ACCESS_ERR, 0)
                 else:
                     dma_id = peer.ctx.submit_dma(
                         "READ", mr.name, wr.remote_offsets, mr.record)
                     slot = None
                     if wr.signaled:
-                        slot = _Cqe(qp.send_cq, wqe.encode_cqe(
-                            wr.opcode, wr.wr_id, wqe.IBV_WC_SUCCESS,
-                            int(np.asarray(wr.remote_offsets).size)))
-                        cqes.append(slot)
+                        slot = stage(qp.send_cq, wr.opcode, wr.wr_id,
+                                     wqe.IBV_WC_SUCCESS,
+                                     int(np.asarray(wr.remote_offsets).size))
                     reads.append((peer.ctx, dma_id, slot, wr))
             else:
                 raise ValueError(f"unknown opcode {wr.opcode:#x}")
@@ -213,8 +486,8 @@ class MeshTransport(LoopbackTransport):
     ring, payload once over the fattest direct path (striped ppermute)."""
 
     def __init__(self, plan: TransferPlan | None = None, *,
-                 staged: bool = False):
-        super().__init__()
+                 staged: bool = False, vectorized: bool = True):
+        super().__init__(vectorized=vectorized)
         self.plan = plan or TransferPlan()
         self.staged = staged
         self.wire_sends = 0
@@ -249,20 +522,24 @@ class VerbsPair:
     def __init__(self, pd: ProtectionDomain | None = None,
                  transport: LoopbackTransport | None = None, *,
                  depth: int = 512, publish_every: int = 8,
-                 max_wr: int = 256, srq=None, flow_control: bool = False):
+                 max_wr: int = 256, srq=None, flow_control: bool = False,
+                 vectorized: bool = True):
         self.pd = pd or ProtectionDomain()
-        self.transport = transport or LoopbackTransport()
+        self.transport = transport if transport is not None else \
+            LoopbackTransport(vectorized=vectorized)
         self.srq = srq                  # shared recv pool for the server QP
-        self.client_cq = CompletionQueue(depth, publish_every)
-        self.client_recv_cq = CompletionQueue(depth, publish_every)
-        self.server_cq = CompletionQueue(depth, publish_every)
-        self.server_recv_cq = CompletionQueue(depth, publish_every)
+        self.client_cq = CompletionQueue(depth, publish_every, vectorized)
+        self.client_recv_cq = CompletionQueue(depth, publish_every, vectorized)
+        self.server_cq = CompletionQueue(depth, publish_every, vectorized)
+        self.server_recv_cq = CompletionQueue(depth, publish_every, vectorized)
         self.client = QueuePair(self.pd, self.client_cq, self.client_recv_cq,
                                 max_send_wr=max_wr, max_recv_wr=max_wr,
-                                flow_control=flow_control)
+                                flow_control=flow_control,
+                                vectorized=vectorized)
         self.server = QueuePair(self.pd, self.server_cq, self.server_recv_cq,
                                 max_send_wr=max_wr, max_recv_wr=max_wr,
-                                srq=srq, flow_control=flow_control)
+                                srq=srq, flow_control=flow_control,
+                                vectorized=vectorized)
         connect(self.client, self.server, self.transport)
 
     def rpc(self, opcode: int, payload, wr_id: int = 0):

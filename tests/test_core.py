@@ -67,6 +67,10 @@ def test_batched_read_coalesces_to_one_dma():
     eng.handle_packet(OP_BATCH_READ, np.array([1, 2, 3, 4, 5], np.int32))
     ctx = eng._qps[0]
     assert ctx.dma_launches == 1          # 5 reads -> one fused gather
+    # Listing 1 submits ONE DMA carrying every offset — N single-offset
+    # submissions would defeat the coalescing the opcode demonstrates
+    assert len(ctx._dma_queue) == 1
+    assert ctx._dma_queue[0].offsets.size == 5
 
 
 def test_list_traversal_opcode():
