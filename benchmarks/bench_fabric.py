@@ -1,0 +1,165 @@
+"""ISSUE 5 tentpole proof — routed multi-pod fabric.
+
+Three counter-based contracts plus the wall-clock routing tax:
+
+  * fabric_fanout_4pod: one client fans 64-WR RDMA_WRITE chains out to
+    4 pods through ONE fabric pass — descriptor-fetch DMAs/WR stay at
+    1/N (one chain fetch per destination) and every destination context
+    retires its chain in ONE fused scatter launch;
+  * fabric_routing_overhead: the same 64-WR WRITE chain through the
+    routed fabric vs direct-connect LoopbackTransport — the acceptance
+    bar is <=10% overhead (route lookup is per-run, not per-WR);
+  * fabric_rnr: retry-with-backoff schedule counters (rnr_retries /
+    rnr_exhausted / backoff units) for a receiver that catches up after
+    2 timeouts and for one that never does.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import verbs
+
+CHAIN = 64
+N_PODS = 4
+
+
+def _median_us(fn, iters: int = 5) -> float:
+    fn()                                 # warmup (jit/op caches)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        fn()
+        ts.append((time.perf_counter_ns() - t0) / 1e3)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _write_chain(rkey, n):
+    return [verbs.SendWR(
+        wr_id=i, opcode=verbs.IBV_WR_RDMA_WRITE, remote_key=rkey,
+        remote_offsets=[i], payload=np.full((1, 4), float(i), np.float32),
+        signaled=False) for i in range(n)]
+
+
+def _bench_fanout():
+    fabric = verbs.Fabric(pods=N_PODS)
+    eps, chains = [], []
+    for p in range(N_PODS):
+        cm = fabric.node(f"pod{p}/dev0")
+        mr = cm.pd.reg_mr(f"dst{p}", np.zeros((CHAIN, 4), np.float32))
+        ep = fabric.connect(cm.listen(depth=CHAIN + 16, srq=None,
+                                      max_wr=CHAIN + 8),
+                            depth=CHAIN + 16, max_wr=CHAIN + 8)
+        eps.append(ep)
+        chains.append(_write_chain(mr.rkey, CHAIN))
+
+    def once():
+        for ep, chain in zip(eps, chains):
+            ep.post_send(chain)
+        assert fabric.flush(*eps) == N_PODS * CHAIN
+
+    us = _median_us(once)
+    d0 = sum(ep.qp.desc_fetch_dmas for ep in eps)
+    l0 = sum(ep.peer.qp.ctx.dma_launches for ep in eps)
+    once()
+    total = N_PODS * CHAIN
+    dmas_per_wr = (sum(ep.qp.desc_fetch_dmas for ep in eps) - d0) / total
+    launches_per_wr = \
+        (sum(ep.peer.qp.ctx.dma_launches for ep in eps) - l0) / total
+    return [(f"fabric_fanout_{N_PODS}pod_{CHAIN}wr", us / total,
+             f"total_wrs={total};desc_dmas_per_wr={dmas_per_wr:.6f};"
+             f"launches_per_wr={launches_per_wr:.6f};"
+             f"wrs_per_s={total / us * 1e6:.0f}")]
+
+
+def _bench_routing_overhead():
+    # routed: one fabric endpoint, 64-WR WRITE chain
+    fabric = verbs.Fabric(pods=2)
+    cm = fabric.node("pod1/dev0")
+    fmr = cm.pd.reg_mr("fdst", np.zeros((CHAIN, 4), np.float32))
+    ep = fabric.connect(cm.listen(depth=CHAIN + 16, srq=None,
+                                  max_wr=CHAIN + 8),
+                        depth=CHAIN + 16, max_wr=CHAIN + 8)
+    fchain = _write_chain(fmr.rkey, CHAIN)
+
+    def fabric_once():
+        ep.post_send(fchain)
+        ep.flush()
+
+    # direct: the PR 3 baseline path (VerbsPair on LoopbackTransport)
+    pair = verbs.VerbsPair(depth=CHAIN + 16, max_wr=CHAIN + 8)
+    dmr = pair.pd.reg_mr("ddst", np.zeros((CHAIN, 4), np.float32))
+    dchain = _write_chain(dmr.rkey, CHAIN)
+
+    def direct_once():
+        pair.client.post_send(dchain)
+        pair.client.flush()
+
+    # interleave the samples AND alternate the order inside each round:
+    # timing one path to completion first (or always second in a pair)
+    # hands it systematically warmer caches/allocator/CPU state and
+    # skews the ratio by far more than the routing layer costs
+    for fn in (direct_once, fabric_once):
+        fn()
+        fn()
+    ts_f, ts_d = [], []
+    for i in range(16):
+        pair_order = (direct_once, fabric_once) if i % 2 == 0 else \
+            (fabric_once, direct_once)
+        for fn in pair_order:
+            t0 = time.perf_counter_ns()
+            fn()
+            dt = (time.perf_counter_ns() - t0) / 1e3
+            (ts_d if fn is direct_once else ts_f).append(dt)
+    ts_f.sort()
+    ts_d.sort()
+    us_f, us_d = ts_f[len(ts_f) // 2], ts_d[len(ts_d) // 2]
+    # the overhead RATIO uses the min of each sample set: both passes do
+    # identical deterministic work, so min-of-N is the least-contended
+    # observation and scheduler noise cancels instead of leaking into
+    # the ratio (medians still report the throughput trajectory)
+    overhead = ts_f[0] / ts_d[0] - 1.0
+    return [(f"fabric_routing_overhead_{CHAIN}wr", us_f / CHAIN,
+             f"direct_us_per_wr={us_d / CHAIN:.3f};"
+             f"overhead={overhead * 100:.1f}%;"
+             f"wrs_per_s={CHAIN / us_f * 1e6:.0f}")]
+
+
+def _bench_rnr():
+    # receiver catches up after 2 timeout backoffs
+    def refill(qp, tries):
+        if tries == 2:
+            ok.peer.qp.rq.extend(
+                verbs.RecvWR(wr_id=i) for i in range(8))
+
+    f1 = verbs.Fabric(rnr_retry=5, on_rnr_backoff=refill)
+    ok = f1.connect(f1.node(f1.gids[0]).listen(depth=64, srq=None),
+                    depth=64)
+    ok.post_send([verbs.SendWR(wr_id=i, payload=np.array([i], np.int64),
+                               signaled=False) for i in range(8)])
+    t0 = time.perf_counter_ns()
+    ok.flush()
+    us = (time.perf_counter_ns() - t0) / 1e3
+    delivered = len(ok.peer.recv_cq.poll())
+    # receiver never catches up: the budget converts the stall into
+    # IBV_WC_RNR_ERR completions instead of a wedged queue
+    f2 = verbs.Fabric(rnr_retry=2)
+    dead = f2.connect(f2.node(f2.gids[0]).listen(depth=64, srq=None),
+                      depth=64)
+    dead.post_send([verbs.SendWR(wr_id=i, payload=np.array([i], np.int64))
+                    for i in range(4)])
+    dead.flush()
+    errs = sum(w.status == verbs.IBV_WC_RNR_ERR for w in dead.poll())
+    return [("fabric_rnr_retry_sched", us / 8,
+             f"delivered={delivered}/8;rnr_retries={f1.rnr_retries};"
+             f"backoff_units={f1.rnr_backoff_units};"
+             f"rnr_exhausted={f1.rnr_exhausted}"),
+            ("fabric_rnr_exhaustion", 0.0,
+             f"rnr_err_cqes={errs}/4;rnr_retries={f2.rnr_retries};"
+             f"rnr_exhausted={f2.rnr_exhausted}")]
+
+
+def run():
+    return _bench_fanout() + _bench_routing_overhead() + _bench_rnr()

@@ -1,0 +1,124 @@
+"""Perf regression gate: ``scripts/bench.sh --check``.
+
+Re-runs the headline benchmark modules into a temp dir and compares
+their metrics against the committed ``BENCH_<name>.json`` baselines at
+the repo root. A >20% regression in any headline metric fails the
+check — the perf trajectory is enforced, not just recorded.
+
+Two tolerance tiers: counter-based metrics (descriptor DMAs/WR,
+launches/WR, overruns) are deterministic, so they hard-fail at the 20%
+bar. Wall-clock throughput (wrs_per_s) swings ±20% run-to-run on this
+rig with UNCHANGED code (container scheduling noise), so it warns at
+20% and hard-fails only past 50% — loud on a real datapath collapse,
+quiet on rig weather.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+# benchmark -> {metric: direction}. "higher" regresses when fresh falls
+# below baseline; "lower" when it rises above (a zero baseline for a
+# "lower" metric tolerates zero only). Wall metrics are the WALL set;
+# everything else is a deterministic counter.
+HEADLINES = {
+    "line_rate": {"wrs_per_s": "higher", "launches_per_wr": "lower"},
+    "srq": {"desc_dmas_per_wr": "lower", "overruns": "lower"},
+    "fabric": {"desc_dmas_per_wr": "lower", "launches_per_wr": "lower",
+               "wrs_per_s": "higher"},
+}
+WALL_METRICS = {"wrs_per_s"}
+TOLERANCE = 0.20            # counters: deterministic, hard bar
+WALL_TOLERANCE = 0.50       # wall clock: warn past 20%, fail past 50%
+
+
+def _rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {row["name"]: row.get("derived", {}) for row in payload["rows"]}
+
+
+def _regression(direction: str, base: float, fresh: float,
+                tol: float) -> bool:
+    """True when fresh regressed past tol vs the committed baseline."""
+    if direction == "higher":
+        return fresh < base * (1.0 - tol)
+    if base == 0:
+        return fresh != 0
+    return fresh > base * (1.0 + tol)
+
+
+def check(repo_root: str, fresh_dir: str, names) -> list[str]:
+    failures: list[str] = []
+    for name in names:
+        metrics = HEADLINES[name]
+        base_path = os.path.join(repo_root, f"BENCH_{name}.json")
+        fresh_path = os.path.join(fresh_dir, f"BENCH_{name}.json")
+        if not os.path.exists(base_path):
+            failures.append(f"{name}: no committed baseline {base_path}")
+            continue
+        base, fresh = _rows(base_path), _rows(fresh_path)
+        for row, base_derived in base.items():
+            fresh_derived = fresh.get(row)
+            if fresh_derived is None:
+                failures.append(f"{name}/{row}: row missing from fresh run")
+                continue
+            for metric, direction in metrics.items():
+                b, f = base_derived.get(metric), fresh_derived.get(metric)
+                if not isinstance(b, (int, float)) or \
+                        not isinstance(f, (int, float)):
+                    continue            # metric not reported on this row
+                wall = metric in WALL_METRICS
+                tol = WALL_TOLERANCE if wall else TOLERANCE
+                bad = _regression(direction, float(b), float(f), tol)
+                noisy = wall and not bad and \
+                    _regression(direction, float(b), float(f), TOLERANCE)
+                mark = "REG" if bad else ("~~~" if noisy else "ok ")
+                print(f"  [{mark}] {name}/{row} {metric}: "
+                      f"base={b} fresh={f} ({direction} is better)")
+                if bad:
+                    failures.append(
+                        f"{name}/{row} {metric}: {b} -> {f} "
+                        f"(>{tol:.0%} regression)")
+    return failures
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="",
+                   help="restrict to one benchmark (e.g. line_rate)")
+    args = p.parse_args()
+    names = [n for n in HEADLINES if not args.only or args.only in n]
+    if not names:
+        # a filter matching nothing must not green-light the gate
+        print(f"# --only {args.only!r} matches no headline benchmark "
+              f"(have: {', '.join(HEADLINES)})")
+        raise SystemExit(2)
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with tempfile.TemporaryDirectory() as fresh_dir:
+        for name in names:
+            print(f"# running benchmarks.bench_{name} ...")
+            subprocess.run(
+                [sys.executable, "-m", "benchmarks.run", "--only", name,
+                 "--json-dir", fresh_dir],
+                check=True, cwd=repo_root,
+                env={**os.environ,
+                     "PYTHONPATH": os.path.join(repo_root, "src")
+                     + os.pathsep + os.environ.get("PYTHONPATH", "")})
+        failures = check(repo_root, fresh_dir, names)
+    if failures:
+        print("# PERF CHECK FAILED:")
+        for f in failures:
+            print(f"#   {f}")
+        raise SystemExit(1)
+    print("# perf check passed: counters within "
+          f"{TOLERANCE:.0%}, wall metrics within {WALL_TOLERANCE:.0%} "
+          "of committed baselines")
+
+
+if __name__ == "__main__":
+    main()

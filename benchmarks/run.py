@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_verbs",          # §4 verbs-layer overhead
     "benchmarks.bench_srq",            # SRQ / doorbell batching / CQ credit
     "benchmarks.bench_line_rate",      # ISSUE 3: batch-wise dispatch chains
+    "benchmarks.bench_fabric",         # ISSUE 5: routed multi-pod fabric
     "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
 ]
 

@@ -3,7 +3,14 @@
 # trajectory files. Usage:
 #   scripts/bench.sh                   # every module
 #   scripts/bench.sh --only line_rate  # one module
+#   scripts/bench.sh --check           # regression gate: re-run the
+#       headline modules and fail on regression vs the committed
+#       BENCH_<name>.json baselines (counters >20%, wall >50%; see
+#       benchmarks/check.py)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--check" ]]; then
+    exec python -m benchmarks.check "${@:2}"
+fi
 exec python -m benchmarks.run "$@"

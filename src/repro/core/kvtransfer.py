@@ -2,10 +2,11 @@
 
 Prefill pods produce KV caches in the *streaming layout* (sequence sharded
 over `model`, batch over `data`) — the same layout decode consumes. The
-transfer is issued as ONE verbs SEND on an RC queue pair over the mesh
-transport: the WQE/CQE headers ride the T3 ring (the CQ), the payload
-moves once, pod->pod, already striped over all 256 per-pod ICI paths
-(packet spraying, via `tx_engine.transmit` under `MeshTransport`). The
+transfer is issued as ONE verbs SEND on a fabric-routed RC queue pair
+(prefill pod CM -> decode pod listener): the WQE/CQE headers ride the T3
+ring (the CQ), the payload moves once, pod->pod, already striped over
+all 256 per-pod ICI paths (packet spraying, via `tx_engine.transmit`
+under the fabric's cross-pod `_move_payload`). The
 staged baseline re-replicates over `model` first (the QP hash-collision
 analogue: all bytes ride one path per data-row, stripe-factor more wire
 traffic).
@@ -14,6 +15,7 @@ Wire compression (int8 KV) is the beyond-paper knob (DESIGN.md §8).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -46,36 +48,65 @@ def account(caches, plan: TransferPlan) -> TransferStats:
 
 class KVTransferEngine:
     """Moves a model's decode cache across the `pod` axis through the
-    verbs layer: an RC QP pair on a MeshTransport, one SEND per transfer."""
+    verbs fabric: the prefill pod's CM connects to the decode pod's
+    listener (`fabric.connect` — no manual QP bring-up) and each
+    transfer is one SEND on the routed RC connection."""
 
     def __init__(self, model, batch: int, seq_len: int,
                  plan: TransferPlan | None = None, *,
-                 vectorized: bool = True):
+                 vectorized: bool = True, fabric=None):
         self.model = model
         self.plan = plan or TransferPlan()
         self.spec_tree = model.cache_specs(batch, seq_len)
-        # decode-side landing buffers come from a shared pool (SRQ) and
-        # the prefill sender runs under CQ-credit flow control: a slow
-        # decode pod ENOMEMs the sender instead of overrunning its CQ;
-        # `vectorized` selects batch-wise dispatch end-to-end (WQE chain
-        # encode, ring slices, per-CQ CQE blocks) vs the scalar oracle
-        self.srq = verbs.SharedReceiveQueue(max_wr=256)
-        self.pair = verbs.VerbsPair(
-            transport=verbs.MeshTransport(self.plan, vectorized=vectorized),
-            depth=256, srq=self.srq, flow_control=True,
-            vectorized=vectorized)
-        self.ring = self.pair.server_recv_cq.ring   # the header path (T3)
+        # decode-side landing buffers come from the FABRIC-scope shared
+        # pool (one SRQ + one watermark for every tenant on the fabric)
+        # and the prefill sender runs under CQ-credit flow control: a
+        # slow decode pod ENOMEMs the sender instead of overrunning its
+        # CQ. A caller-supplied fabric shares its pool (and routing)
+        # with other engines; by default the engine spans its own
+        # 2-pod grid so the payload tree rides the striped cross-pod
+        # wire (tx_engine.transmit under the routed `_move_payload`).
+        self.fabric = fabric if fabric is not None else verbs.Fabric(
+            pods=2, plan=self.plan, vectorized=vectorized)
+        self.srq = self.fabric.shared_srq(max_wr=256)
+        decode_cm = self.fabric.node(self.fabric.gids[-1])
+        if fabric is not None and self.fabric.pods < 2:
+            # the wire bypass is decided by POD equality (the fabric
+            # lowers spec_tree SENDs onto tx_engine only across pods):
+            # on a single-pod fabric — however many devices — transfers
+            # move by reference and transfer_staged has no striped-vs-
+            # staged wire to compare
+            warnings.warn(
+                "KVTransferEngine on a single-pod fabric: transfers "
+                "are intra-pod (by reference); the tx_engine wire "
+                "(and transfer_staged's baseline) is bypassed",
+                stacklevel=2)
+        self._listen_addr = decode_cm.listen(depth=256, srq="fabric",
+                                             flow_control=True)
+        self.ep = self.fabric.connect(self._listen_addr,
+                                      src_gid=self.fabric.gids[0],
+                                      depth=256, flow_control=True)
+        self.ring = self.ep.peer.recv_cq.ring   # the header path (T3)
         self.stats = TransferStats()
         self._wr_id = 0
 
+    def close(self):
+        """Release every fabric registration this engine holds (listener,
+        both QPs, routes, SRQ membership): a long-lived shared fabric
+        must not grow state per short-lived engine."""
+        self.fabric.unlisten(self._listen_addr)
+        self.fabric.disconnect(self.ep)
+        return self
+
     def _send(self, caches, staged: bool):
         self.stats = account(caches, self.plan)
-        self.pair.transport.staged = staged
+        self.fabric.plan = self.plan
+        self.fabric.staged = staged
         self._wr_id += 1
-        wc = self.pair.send(caches, wr_id=self._wr_id,
-                            spec_tree=self.spec_tree, inline=False)
+        wc = self.ep.send(caches, wr_id=self._wr_id,
+                          spec_tree=self.spec_tree, inline=False)
         assert wc.ok, f"transfer completion status {wc.status}"
-        self.pair.client_cq.poll()          # retire the send completion
+        self.ep.poll()                      # retire the send completion
         return wc.data
 
     def transfer(self, caches):
@@ -88,7 +119,8 @@ class KVTransferEngine:
         single WQE chain (one descriptor-fetch DMA for the whole batch)
         and the decode pool absorbs them from the SRQ. Returns received
         trees in order."""
-        self.pair.transport.staged = False
+        self.fabric.plan = self.plan
+        self.fabric.staged = False
         per = [account(c, self.plan) for c in cache_list]
         self.stats = TransferStats(
             n_leaves=sum(s.n_leaves for s in per),
@@ -96,11 +128,11 @@ class KVTransferEngine:
             header_bytes=sum(s.header_bytes for s in per))
         base = self._wr_id + 1              # same sequence transfer() uses
         self._wr_id += len(cache_list)
-        wcs = self.pair.send_many(cache_list, wr_id=base,
-                                  spec_tree=self.spec_tree, inline=False)
+        wcs = self.ep.send_many(cache_list, wr_id=base,
+                                spec_tree=self.spec_tree, inline=False)
         for wc in wcs:
             assert wc.ok, f"transfer completion status {wc.status}"
-        self.pair.client_cq.poll()          # retire the send completions
+        self.ep.poll()                      # retire the send completions
         return [wc.data for wc in wcs]
 
     def transfer_staged(self, caches):

@@ -22,6 +22,18 @@ def make_mesh(shape: tuple, axes: tuple):
     return jax.make_mesh(shape, axes)
 
 
+def make_fabric_mesh(pods: int, devices_per_pod: int = 1):
+    """The verbs fabric's second mesh axis: a (`pod`, `device`) grid for
+    routed multi-pod QPs. Built through `make_mesh` (the version-compat
+    shim — never raw ``jax.make_mesh``). Returns ``None`` when the rig
+    does not expose exactly ``pods * devices_per_pod`` devices (the
+    1-device CPU test rig): the fabric then routes over the logical grid
+    only, with identical addressing semantics."""
+    if pods * devices_per_pod != len(jax.devices()):
+        return None
+    return make_mesh((pods, devices_per_pod), ("pod", "device"))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

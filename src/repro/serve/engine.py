@@ -36,26 +36,35 @@ class Request:
 class ServeEngine:
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_seq: int = 256, ring_capacity: int = 64,
-                 vectorized: bool = True):
+                 vectorized: bool = True, fabric=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
         self.max_batch = max_batch
         self.max_seq = max_seq
-        # the engine QP draws landing buffers from a shared recv pool —
-        # an SRQ armed with a low watermark whose limit event (not a
-        # depth poll) is the refill doorbell; more engine QPs (tenants)
-        # can attach to the same pool later. `vectorized` selects the
-        # batch-wise verbs datapath (submit bursts ride slice-based ring
-        # writes and per-CQ CQE blocks) vs the scalar oracle.
-        self.srq = verbs.SharedReceiveQueue(
-            max_wr=max(256, 4 * max_batch), srq_limit=max_batch,
-            on_limit=self._refill_srq)
-        self.pair = verbs.VerbsPair(depth=ring_capacity,
-                                    max_wr=max(256, 2 * max_batch),
-                                    srq=self.srq, vectorized=vectorized)
+        # the engine is a fabric tenant: its listener's QPs draw landing
+        # buffers from the FABRIC-scope recv pool, armed with a low
+        # watermark whose limit event (not a depth poll) is the refill
+        # doorbell. A caller-supplied fabric shares one pool (and one
+        # watermark) with the other tenants on it — kvtransfer,
+        # pd_disagg, more engines. The CM drives all QP bring-up; no
+        # state-machine calls here. `vectorized` selects the batch-wise
+        # verbs datapath (submit bursts ride slice-based ring writes and
+        # per-CQ CQE blocks) vs the scalar oracle.
+        self.fabric = fabric if fabric is not None else \
+            verbs.Fabric(vectorized=vectorized)
+        self.srq = self.fabric.shared_srq(max_wr=max(256, 4 * max_batch))
+        self.fabric.on_srq_limit(self._refill_srq)
+        cm = self.fabric.node(self.fabric.gids[0])
+        self._listen_addr = cm.listen(depth=ring_capacity,
+                                      max_wr=max(256, 2 * max_batch),
+                                      srq="fabric")
+        self.ep = self.fabric.connect(self._listen_addr,
+                                      src_gid=self.fabric.gids[0],
+                                      depth=ring_capacity,
+                                      max_wr=max(256, 2 * max_batch))
         self._refill_srq(self.srq)
-        self.ring = self.pair.server_recv_cq.ring   # the T3 header pipe
+        self.ring = self.ep.peer.recv_cq.ring       # the T3 header pipe
         self.pinned_prompts: dict[int, np.ndarray] = {}   # payload table
         self.requests: dict[int, Request] = {}
         self.slots: list[int | None] = [None] * max_batch
@@ -64,6 +73,17 @@ class ServeEngine:
         self._next_id = 0
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
+
+    def close(self):
+        """Release every registration this engine holds on the fabric
+        (listener, both QPs, routes, SRQ membership, and the refill
+        doorbell — which would otherwise keep firing AND pin the whole
+        engine alive through its closure): a short-lived engine on a
+        long-lived shared fabric must leak nothing."""
+        self.srq.remove_on_limit(self._refill_srq)
+        self.fabric.unlisten(self._listen_addr)
+        self.fabric.disconnect(self.ep)
+        return self
 
     # -- client side --------------------------------------------------------
     def submit(self, prompt: list, max_new_tokens: int = 16) -> int:
@@ -89,7 +109,7 @@ class ServeEngine:
         A list is staged as one WQE chain and rings ONE doorbell."""
         if not isinstance(descs, list):
             descs = [descs]
-        self.pair.client.post_send([
+        self.ep.post_send([
             verbs.SendWR(wr_id=int(d[1]), payload=np.asarray(d, np.int64),
                          inline=True, signaled=False) for d in descs])
 
@@ -107,8 +127,8 @@ class ServeEngine:
         # CQEs land batched on the ring
         if len(self.srq) < self.max_batch:
             self._refill_srq(self.srq)
-        self.pair.client.flush()
-        pending = [wc.data for wc in self.pair.server_recv_cq.poll()]
+        self.ep.flush()
+        pending = [wc.data for wc in self.ep.peer.recv_cq.poll()]
         for i, d in enumerate(pending):
             rid = int(d[1])
             slot = self._free_slot()

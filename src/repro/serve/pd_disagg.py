@@ -22,7 +22,7 @@ from repro.serve.kvcache import PagedKVPool, pad_caches
 class PDServer:
     def __init__(self, model, params, *, max_seq: int = 128,
                  page_tokens: int = 16, quantize_bits: int = 0,
-                 vectorized: bool = True):
+                 vectorized: bool = True, fabric=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -32,6 +32,10 @@ class PDServer:
         # batch-wise verbs dispatch on the transfer leg (scalar oracle
         # when False); threaded into the KVTransferEngine per transfer
         self.vectorized = vectorized
+        # optional shared verbs fabric: when given, every transfer's
+        # KVTransferEngine rides it (and its fabric-scope recv pool)
+        # instead of spanning a private 2-pod grid per transfer
+        self.fabric = fabric
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
 
@@ -50,9 +54,17 @@ class PDServer:
         flow control come with it, and the transfer path lives in ONE
         place."""
         eng = KVTransferEngine(self.model, batch, seq_len, self.plan,
-                               vectorized=self.vectorized)
-        data = eng.transfer_staged(caches) if staged else \
-            eng.transfer(caches)
+                               vectorized=self.vectorized,
+                               fabric=self.fabric)
+        try:
+            data = eng.transfer_staged(caches) if staged else \
+                eng.transfer(caches)
+        finally:
+            if self.fabric is not None:
+                # per-transfer engine on a LONG-LIVED shared fabric:
+                # release its listener/QPs/routes or the fabric grows
+                # per call
+                eng.close()
         return data, eng.stats
 
     # -- decode pod (with paged ingest) ----------------------------------

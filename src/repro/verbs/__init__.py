@@ -10,6 +10,8 @@ One API over the four FlexiNS engines:
 See src/repro/verbs/README.md for the verbs <-> engine mapping table.
 """
 from repro.verbs.cq import CompletionQueue, CQOverrunError, WorkCompletion
+from repro.verbs.fabric import (ConnectionManager, Fabric, FabricAddress,
+                                FabricEndpoint)
 from repro.verbs.pd import MemoryRegion, ProtectionDomain
 from repro.verbs.qp import (ENOMEMError, QPState, QPStateError, QueuePair,
                             RecvWR, SendWR)
@@ -23,6 +25,7 @@ from repro.verbs.wqe import (IBV_WC_ACCESS_ERR, IBV_WC_RECV, IBV_WC_RNR_ERR,
 
 __all__ = [
     "CompletionQueue", "CQOverrunError", "WorkCompletion",
+    "ConnectionManager", "Fabric", "FabricAddress", "FabricEndpoint",
     "MemoryRegion", "ProtectionDomain",
     "ENOMEMError", "QPState", "QPStateError", "QueuePair", "RecvWR",
     "SendWR", "SharedReceiveQueue",

@@ -1,0 +1,542 @@
+"""Routed multi-pod fabric: connection manager + addressed QPs.
+
+FlexiNS keeps transport policy (QPs, steering, notification) on the NIC
+so many connections/tenants share one engine without per-connection
+control-plane cost. This module is that control plane for the repro:
+
+  * `FabricAddress` — a QP (or listener) named by ``(gid, qpn)``, where
+    the GID is a ``"pod{p}/dev{d}"`` coordinate on the fabric's second
+    mesh axis (`pod` x `device`, built through the
+    ``repro.launch.mesh.make_fabric_mesh`` shim — never raw
+    ``jax.make_mesh``);
+  * `ConnectionManager` — the RDMA-CM analogue, one per fabric node:
+    ``listen`` registers a service, ``resolve`` maps a service name to
+    an address, ``connect`` mints BOTH sides' QPs and drives them
+    RESET -> INIT -> RTR -> RTS itself. Clients never touch the RC
+    state machine;
+  * `Fabric` — a routing `LoopbackTransport`: the routing table maps a
+    source qp_num to its destination ``(gid, qpn)`` and one
+    ``fabric.flush(*endpoints)`` pass dispatches every endpoint's WR
+    chain batch-wise (PR 3 semantics): same-opcode runs still fuse —
+    grouped per (dst_ctx, opcode) run — CQEs of the whole pass publish
+    once per CQ, and a chain spanning destination QPs costs one
+    descriptor-fetch DMA per chain, not per WR. Cross-POD payload-tree
+    SENDs lower onto `tx_engine.transmit` (the T1 striped ppermute),
+    intra-pod ones move by reference — `MeshTransport` semantics,
+    routed.
+
+Fabric-scope SRQ: ``fabric.shared_srq()`` is ONE recv pool (and one
+``srq_limit`` watermark, fanned out to every registered refill doorbell
+via ``SharedReceiveQueue.add_on_limit``) serving every listener that
+asked for ``srq="fabric"`` — serve-engine, kvtransfer and pd_disagg
+tenants draw landing buffers from the same pool.
+
+RNR semantics: ibverbs' rnr_retry. ``rnr_retry=7`` (the default) means
+retry forever — a stalled SEND stays queued, exactly the pre-fabric
+behavior. With a finite budget, ONE ``flush()`` runs the whole retry
+schedule for a stalled head WR: each retry models one RNR timeout
+firing (exponential backoff accumulates in ``rnr_backoff_units``, and
+``on_rnr_backoff`` is the timeout hook — refill the peer there to model
+a receiver catching up) and re-dispatches; a WR still stalled past the
+budget retires with an ``IBV_WC_RNR_ERR`` completion — surfaced through
+``poll_cq`` like any other status, with ``rnr_retries`` /
+``rnr_exhausted`` counters on both the fabric and the QP for the
+benches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.descriptors import TransferPlan
+from repro.launch.mesh import make_fabric_mesh
+from repro.verbs import wqe
+from repro.verbs.cq import CompletionQueue, CQOverrunError
+from repro.verbs.pd import ProtectionDomain
+from repro.verbs.qp import QPState, QPStateError, QueuePair, SendWR
+from repro.verbs.srq import SharedReceiveQueue
+from repro.verbs.transport import MeshTransport, two_sided_send
+
+# first qpn handed to listeners: a separate "service port" space so a
+# listener address can never collide with a real QP number
+_SERVICE_QPN_BASE = 1 << 20
+
+
+@dataclass(frozen=True)
+class FabricAddress:
+    """Where a QP (or a listener) lives on the fabric: mesh coordinate
+    (gid, e.g. ``"pod1/dev0"``) + queue-pair / service number."""
+    gid: str
+    qpn: int
+
+    @property
+    def pod(self) -> str:
+        return self.gid.split("/", 1)[0]
+
+
+def as_address(addr) -> FabricAddress:
+    if isinstance(addr, FabricAddress):
+        return addr
+    if isinstance(addr, tuple) and len(addr) == 2:
+        return FabricAddress(str(addr[0]), int(addr[1]))
+    raise TypeError(f"not a fabric address: {addr!r}")
+
+
+@dataclass
+class _Listener:
+    """One ``cm.listen()`` registration: accepted QPs share this recv CQ
+    (and the fabric pool when srq is the shared one)."""
+    cm: "ConnectionManager"
+    service: str | None
+    addr: FabricAddress
+    recv_cq: CompletionQueue
+    depth: int
+    publish_every: int
+    max_wr: int
+    srq: SharedReceiveQueue | None
+    flow_control: bool
+    on_connect: Callable | None
+    accepted: list = field(default_factory=list)
+
+
+class FabricEndpoint:
+    """One side of a CM-established connection: the QP plus its CQs and
+    the VerbsPair-style convenience surface (rpc/send/send_many). On the
+    loopback rig ``.peer`` is the other side's endpoint — what a client
+    polls to observe server-side recv completions in-process."""
+
+    def __init__(self, fabric: "Fabric", qp: QueuePair, gid: str,
+                 remote: FabricAddress | None = None,
+                 peer: "FabricEndpoint | None" = None,
+                 listener: _Listener | None = None):
+        self.fabric = fabric
+        self.qp = qp
+        self.gid = gid
+        self.remote = remote
+        self.peer = peer
+        self.listener = listener        # set on accepted (server) sides
+        self.send_cq = qp.send_cq
+        self.recv_cq = qp.recv_cq
+
+    @property
+    def address(self) -> FabricAddress:
+        return FabricAddress(self.gid, self.qp.qp_num)
+
+    # -- verbs passthrough ---------------------------------------------------
+    def post_send(self, wr):
+        self.qp.post_send(wr)
+        return self
+
+    def post_recv(self, wr):
+        self.qp.post_recv(wr)
+        return self
+
+    def flush(self) -> int:
+        return self.fabric.process(self.qp)
+
+    def poll(self, max_n: int | None = None):
+        return self.send_cq.poll(max_n)
+
+    def poll_recv(self, max_n: int | None = None):
+        return self.recv_cq.poll(max_n)
+
+    # -- the two-lines-of-setup conveniences (VerbsPair surface) -------------
+    def rpc(self, opcode: int, payload, wr_id: int = 0):
+        """post_send + flush + poll: one request/response round trip."""
+        self.qp.post_send(SendWR(wr_id=wr_id, opcode=opcode,
+                                 payload=payload))
+        self.flush()
+        wcs = self.send_cq.poll()
+        assert wcs, "rpc produced no completion"
+        return wcs[-1]
+
+    def _exclusive_recv_cq(self):
+        """send/send_many attribute EVERY completion they drain from the
+        peer's recv CQ to this connection — refuse loudly when the peer's
+        listener shares that CQ with other accepted connections (their
+        completions would be cross-consumed silently). Multi-connection
+        listeners poll the shared CQ themselves (the serve engine)."""
+        lst = self.peer.listener
+        if lst is not None and len(lst.accepted) > 1:
+            raise QPStateError(
+                f"listener at {lst.addr} has {len(lst.accepted)} accepted "
+                "connections sharing one recv CQ; send()/send_many() "
+                "cannot attribute its completions — poll the listener CQ "
+                "directly instead")
+
+    def send(self, payload, *, wr_id: int = 0, spec_tree=None,
+             inline: bool | None = None):
+        """Two-sided SEND to the connected peer; the peer-side recv
+        completion is returned (recv side topped up automatically)."""
+        self._exclusive_recv_cq()
+        wcs = two_sided_send(self.qp, self.flush, self.peer.qp,
+                             self.peer.recv_cq, [payload], wr_id=wr_id,
+                             spec_tree=spec_tree, inline=inline)
+        assert wcs, "send was not delivered (RNR?)"
+        return wcs[-1]
+
+    def send_many(self, payloads: list, *, wr_id: int = 0, spec_tree=None,
+                  inline: bool | None = None):
+        """Doorbell-batched two-sided SENDs: ONE WQE chain (one doorbell
+        write, one descriptor-fetch DMA); recv completions in order."""
+        if not payloads:
+            return []
+        self._exclusive_recv_cq()
+        wcs = two_sided_send(self.qp, self.flush, self.peer.qp,
+                             self.peer.recv_cq, payloads, wr_id=wr_id,
+                             spec_tree=spec_tree, inline=inline)
+        assert len(wcs) == len(payloads), \
+            f"{len(wcs)}/{len(payloads)} delivered (RNR?)"
+        return wcs
+
+
+class ConnectionManager:
+    """RDMA-CM for one fabric node: every QP it mints lives at this
+    node's gid, on this node's protection domain."""
+
+    def __init__(self, fabric: "Fabric", gid: str,
+                 pd: ProtectionDomain | None = None):
+        if gid not in fabric.gids:
+            raise QPStateError(f"gid {gid!r} is not on this fabric "
+                               f"(grid: {fabric.gids})")
+        self.fabric = fabric
+        self.gid = gid
+        self.pd = pd or ProtectionDomain()
+
+    def listen(self, service: str | None = None, *, depth: int = 512,
+               publish_every: int = 8, max_wr: int = 256,
+               srq: Any = "fabric", flow_control: bool = False,
+               on_connect: Callable | None = None) -> FabricAddress:
+        """Register a listener and return its address. Accepted QPs share
+        one recv CQ, and — with ``srq="fabric"`` (the default) — draw
+        their landing buffers from the fabric-scope pool. Pass an SRQ
+        instance for a private pool, or ``None`` for per-QP rq's."""
+        fabric = self.fabric
+        if service is not None and service in fabric._services:
+            raise QPStateError(f"service {service!r} already listening")
+        addr = FabricAddress(self.gid, fabric._next_service_qpn)
+        fabric._next_service_qpn += 1
+        pool = fabric.shared_srq() if srq == "fabric" else srq
+        fabric._listeners[addr.qpn] = _Listener(
+            self, service, addr,
+            CompletionQueue(depth, publish_every, fabric.vectorized),
+            depth, publish_every, max_wr, pool, flow_control, on_connect)
+        if service is not None:
+            fabric._services[service] = addr
+        return addr
+
+    def resolve(self, service: str) -> FabricAddress:
+        """rdma_resolve_addr: service name -> fabric address."""
+        addr = self.fabric._services.get(service)
+        if addr is None:
+            raise QPStateError(f"no listener for service {service!r}")
+        return addr
+
+    def connect(self, addr, *, depth: int = 512, publish_every: int = 8,
+                max_wr: int = 256,
+                flow_control: bool = False) -> FabricEndpoint:
+        """rdma_connect: mint a client QP here, accept a server QP at
+        `addr` (a listener address, a service name, or a bare addressed
+        QP still in RESET) and drive BOTH through the RC ladder. The
+        returned endpoint is ready to post — no state-machine calls left
+        to the client."""
+        fabric = self.fabric
+        if isinstance(addr, str):
+            addr = self.resolve(addr)
+        addr = as_address(addr)
+        vec = fabric.vectorized
+        # accept FIRST: a bad address must fail before the client QP is
+        # minted (QueuePair.__init__ binds a T4 context on pd.engine —
+        # a retry loop against a not-yet-listening service must not grow
+        # the context table)
+        server, listener = fabric._accept(addr)
+        qp = QueuePair(self.pd,
+                       CompletionQueue(depth, publish_every, vec),
+                       CompletionQueue(depth, publish_every, vec),
+                       max_send_wr=max_wr, max_recv_wr=max_wr,
+                       flow_control=flow_control, vectorized=vec)
+        fabric._register(qp, self.gid)
+        for side, dest in ((server.qp, qp.qp_num),
+                           (qp, server.qp.qp_num)):
+            side.modify(QPState.INIT)
+            side.modify(QPState.RTR, dest_qp_num=dest)
+            side.modify(QPState.RTS)
+        fabric.routes[qp.qp_num] = server.address
+        fabric.routes[server.qp.qp_num] = FabricAddress(self.gid,
+                                                        qp.qp_num)
+        ep = FabricEndpoint(fabric, qp, self.gid, remote=server.address,
+                            peer=server)
+        server.remote = ep.address
+        server.peer = ep
+        if listener is not None:
+            listener.accepted.append(server)
+            if listener.on_connect is not None:
+                listener.on_connect(server)
+        return ep
+
+
+class Fabric(MeshTransport):
+    """A routed transport over a `pod` x `device` grid. See the module
+    docstring for the full contract; in one line: addressed QPs, CM
+    bring-up, batch-wise multi-destination dispatch, a fabric-scope SRQ
+    and ibverbs RNR retry/backoff. Subclasses `MeshTransport`: the wire
+    lowering (plan/staged/wire_sends) is ONE implementation, gated here
+    by the route's pod crossing."""
+
+    #: ibverbs sentinel: rnr_retry == 7 retries forever (RNR = stall)
+    RNR_RETRY_INFINITE = 7
+
+    def __init__(self, pods: int = 1, devices_per_pod: int = 1, *,
+                 plan: TransferPlan | None = None, staged: bool = False,
+                 vectorized: bool = True, rnr_retry: int = 7,
+                 rnr_timeout: int = 1,
+                 on_rnr_backoff: Callable[[QueuePair, int], None] | None
+                 = None,
+                 srq_max_wr: int = 512, srq_limit: int = 0):
+        # the cross-pod payload wire (plan/staged/wire_sends) comes from
+        # MeshTransport; _move_payload below gates it on the route
+        super().__init__(plan, staged=staged, vectorized=vectorized)
+        self.pods = pods
+        self.devices_per_pod = devices_per_pod
+        self.gids = [f"pod{p}/dev{d}" for p in range(pods)
+                     for d in range(devices_per_pod)]
+        self._mesh = None
+        self._mesh_built = False
+        # control plane
+        self.nodes: dict[str, ConnectionManager] = {}
+        self.routes: dict[int, FabricAddress] = {}   # src qpn -> dst addr
+        self.gid_of: dict[int, str] = {}
+        self._listeners: dict[int, _Listener] = {}
+        self._services: dict[str, FabricAddress] = {}
+        self._next_service_qpn = _SERVICE_QPN_BASE
+        # fabric-scope shared recv pool (lazy)
+        self._srq: SharedReceiveQueue | None = None
+        self.srq_max_wr = srq_max_wr
+        self.srq_limit = srq_limit
+        # RNR policy + counters
+        self.rnr_retry = rnr_retry
+        self.rnr_timeout = rnr_timeout
+        self.on_rnr_backoff = on_rnr_backoff
+        self.rnr_retries = 0
+        self.rnr_exhausted = 0
+        self.rnr_backoff_units = 0
+
+    @property
+    def mesh(self):
+        """The second mesh axis as a jax Mesh — built LAZILY on first
+        access (consumers sharding payloads over the grid want it; pure
+        routing never touches jax device state): None on rigs without
+        pods*devices devices, where addressing stays identical and
+        routing is logical-only."""
+        if not self._mesh_built:
+            self._mesh = make_fabric_mesh(self.pods, self.devices_per_pod)
+            self._mesh_built = True
+        return self._mesh
+
+    # -- control plane -------------------------------------------------------
+    def node(self, gid: str,
+             pd: ProtectionDomain | None = None) -> ConnectionManager:
+        """The node's connection manager (created on first use)."""
+        cm = self.nodes.get(gid)
+        if cm is None:
+            cm = self.nodes[gid] = ConnectionManager(self, gid, pd)
+        return cm
+
+    def connect(self, addr, *, src_gid: str | None = None,
+                **opts) -> FabricEndpoint:
+        """``fabric.connect(addr)``: connect from `src_gid` (default the
+        grid's first node) — the one-call client bring-up."""
+        return self.node(src_gid or self.gids[0]).connect(addr, **opts)
+
+    def register_qp(self, qp: QueuePair, gid: str) -> FabricAddress:
+        """Give an existing RESET QP a fabric address so a CM can
+        ``connect`` to it directly (addressed-QP connect)."""
+        if qp.transport is not None and qp.transport is not self:
+            raise QPStateError(
+                f"QP {qp.qp_num} is already attached to a different "
+                "transport")
+        if gid not in self.gids:
+            raise QPStateError(f"gid {gid!r} is not on this fabric")
+        self._register(qp, gid)
+        return FabricAddress(gid, qp.qp_num)
+
+    def _register(self, qp: QueuePair, gid: str):
+        self.attach(qp)
+        self.gid_of[qp.qp_num] = gid
+
+    def _accept(self, addr: FabricAddress):
+        """Server side of a connect: mint a QP under the listener at
+        `addr`, or adopt a bare addressed QP still in RESET."""
+        lst = self._listeners.get(addr.qpn)
+        if lst is not None:
+            vec = self.vectorized
+            sqp = QueuePair(
+                lst.cm.pd,
+                CompletionQueue(lst.depth, lst.publish_every, vec),
+                lst.recv_cq, max_send_wr=lst.max_wr,
+                max_recv_wr=lst.max_wr, srq=lst.srq,
+                flow_control=lst.flow_control, vectorized=vec)
+            self._register(sqp, addr.gid)
+            return FabricEndpoint(self, sqp, addr.gid, listener=lst), lst
+        qp = self.qps.get(addr.qpn)
+        if qp is None or self.gid_of.get(addr.qpn) != addr.gid:
+            raise QPStateError(f"nothing listening at {addr}")
+        if qp.state != QPState.RESET:
+            raise QPStateError(
+                f"QP {addr.qpn} at {addr.gid} is {qp.state.name}, "
+                "not RESET — already connected?")
+        return FabricEndpoint(self, qp, addr.gid), None
+
+    def disconnect(self, ep: FabricEndpoint):
+        """rdma_disconnect: tear down BOTH sides of a connection and drop
+        every fabric registration it holds (routes, gids, transport
+        attachment, SRQ membership, listener accept list, T4 contexts) —
+        a long-lived fabric must not accumulate state from short-lived
+        connections (one KVTransferEngine per transfer, say)."""
+        for side in (ep, ep.peer):
+            if side is None:
+                continue
+            self.routes.pop(side.qp.qp_num, None)
+            self.gid_of.pop(side.qp.qp_num, None)
+            if side.listener is not None and \
+                    side in side.listener.accepted:
+                side.listener.accepted.remove(side)
+            side.qp.destroy()       # ERR-flush + transport/SRQ/ctx release
+        return self
+
+    def unlisten(self, addr) -> "Fabric":
+        """Close a listener: new connects to its address are refused
+        (existing connections live until `disconnect`)."""
+        addr = as_address(addr)
+        lst = self._listeners.pop(addr.qpn, None)
+        if lst is not None and lst.service is not None:
+            self._services.pop(lst.service, None)
+        return self
+
+    # -- fabric-scope SRQ ----------------------------------------------------
+    def shared_srq(self, max_wr: int | None = None,
+                   srq_limit: int | None = None) -> SharedReceiveQueue:
+        """THE fabric recv pool (one per fabric, created on first use):
+        every ``srq="fabric"`` listener's QPs draw from it and one
+        watermark serves every tenant."""
+        if self._srq is None:
+            self._srq = SharedReceiveQueue(
+                max_wr or self.srq_max_wr,
+                srq_limit=self.srq_limit if srq_limit is None
+                else srq_limit)
+        else:
+            if max_wr is not None and max_wr > self._srq.max_wr:
+                self._srq.max_wr = max_wr      # grow for a new tenant
+            if srq_limit:
+                self._srq.arm(srq_limit)
+        return self._srq
+
+    @property
+    def srq(self) -> SharedReceiveQueue | None:
+        return self._srq
+
+    def on_srq_limit(self, cb: Callable[[SharedReceiveQueue], None]):
+        """Register a tenant refill doorbell on the fabric pool's single
+        watermark event."""
+        self.shared_srq().add_on_limit(cb)
+        return self
+
+    # -- data plane ----------------------------------------------------------
+    def _peer(self, qp: QueuePair) -> QueuePair:
+        route = self.routes.get(qp.qp_num)
+        if route is not None:
+            peer = self.qps.get(route.qpn)
+            if peer is None or self.gid_of.get(route.qpn) != route.gid:
+                raise QPStateError(
+                    f"QP {qp.qp_num}'s route to {route} is stale "
+                    "(peer destroyed?)")
+            return peer
+        return super()._peer(qp)
+
+    def _move_payload(self, qp: QueuePair, wr: SendWR):
+        """Cross-POD payload trees ride the T1 striped ppermute (packet
+        spraying, MeshTransport's lowering); intra-pod hops move by
+        reference — the wire follows the route."""
+        route = self.routes.get(qp.qp_num)
+        src_gid = self.gid_of.get(qp.qp_num)
+        if route is None or src_gid is None or \
+                route.pod == src_gid.split("/", 1)[0]:
+            return self._wr_source(qp, wr)
+        return super()._move_payload(qp, wr)
+
+    def flush(self, *endpoints) -> int:
+        """ONE dispatch pass over many endpoints (the multi-destination
+        chain case): per-(dst_ctx, opcode) run fusion and one CQE
+        publish per CQ, across every endpoint's chain."""
+        return self.process_many([ep.qp if isinstance(ep, FabricEndpoint)
+                                  else ep for ep in endpoints])
+
+    def process_many(self, qps: list[QueuePair]) -> int:
+        processed = super().process_many(qps)
+        for qp in qps:
+            processed += self._rnr_police(qp)
+        return processed
+
+    def _rnr_police(self, qp: QueuePair) -> int:
+        """ibverbs rnr_retry: a SEND left stalled by the dispatch pass
+        runs its WHOLE retry schedule here, inside this flush — each
+        loop iteration models one RNR timeout firing (backoff counted,
+        `on_rnr_backoff` invoked, queue re-dispatched); a head still
+        stalled past the budget retires with IBV_WC_RNR_ERR instead of
+        wedging the queue. rnr_retry == 7 (the ibverbs sentinel) retries
+        forever — the stall-in-place behavior every non-fabric transport
+        keeps, where the NEXT flush is the retry."""
+        if self.rnr_retry >= self.RNR_RETRY_INFINITE:
+            return 0
+        extra = 0
+        err_ops: list[int] = []     # exhausted WRs batch their RNR_ERR
+        err_ids: list[int] = []     # CQEs: one encode + ONE ring produce
+
+        def publish_errs():
+            if not err_ops:
+                return
+            if not qp.send_cq.destroyed:
+                qp.send_cq.push_batch(wqe.encode_cqe_batch(
+                    err_ops, err_ids, wqe.IBV_WC_RNR_ERR, 0))
+                try:
+                    qp.send_cq.flush()
+                except CQOverrunError:
+                    pass            # staged; republishes on next poll
+            err_ops.clear()
+            err_ids.clear()
+
+        while qp.sq:
+            head = qp.sq[0]
+            if head.wr.opcode != wqe.IBV_WR_SEND:
+                break               # only SENDs stall on RNR
+            if head.rnr_tries < self.rnr_retry:
+                publish_errs()      # keep CQE order ahead of a re-dispatch
+                head.rnr_tries += 1
+                self.rnr_retries += 1
+                qp.rnr_retries += 1
+                # exponential timeout backoff, in rnr_timeout units
+                self.rnr_backoff_units += \
+                    self.rnr_timeout << (head.rnr_tries - 1)
+                if self.on_rnr_backoff is not None:
+                    # the timeout hook: tests/benches refill the peer
+                    # pool here to model a receiver catching up
+                    self.on_rnr_backoff(qp, head.rnr_tries)
+                extra += super().process_many([qp])
+                continue
+            # retry budget exhausted: complete the WR with RNR_ERR
+            qp.sq.popleft()
+            qp._fc_retire(head)
+            self.rnr_exhausted += 1
+            qp.rnr_exhausted += 1
+            err_ops.append(head.wr.opcode)
+            err_ids.append(head.wr.wr_id)
+            extra += 1
+            if qp.sq and qp.sq[0].wr.opcode != wqe.IBV_WR_SEND:
+                # a dispatchable (non-SEND) chain was blocked behind the
+                # exhausted head: run it in THIS flush, not the next one
+                # (stalled-SEND heads instead fall through to the retry
+                # branch above, which re-dispatches anyway)
+                publish_errs()
+                extra += super().process_many([qp])
+        publish_errs()
+        return extra

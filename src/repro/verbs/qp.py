@@ -115,6 +115,9 @@ class _PostedSend:
     # slot for real)
     fc_peer_cq: Any = None
     fc_self_cq: Any = None
+    # RNR-stall retries consumed so far (fabric transports with a finite
+    # rnr_retry budget retire the WR with IBV_WC_RNR_ERR when exhausted)
+    rnr_tries: int = 0
 
 
 class QueuePair:
@@ -150,6 +153,10 @@ class QueuePair:
         # WQE-chain fetch DMA per post_send CALL, however many WRs ride it
         self.doorbell_writes = 0
         self.desc_fetch_dmas = 0
+        # RNR accounting (fabric transports): timeout-backoff retries
+        # consumed and WRs retired IBV_WC_RNR_ERR after retry exhaustion
+        self.rnr_retries = 0
+        self.rnr_exhausted = 0
         # the T4 context every one-sided op against this QP coalesces in
         # (bound into the engine so handle_packet dispatches into it too)
         self.ctx = pd.engine.bind_context(
@@ -181,22 +188,32 @@ class QueuePair:
     def _flush_err(self):
         """Retire every posted WR with an IBV_WC_WR_FLUSH_ERR completion
         (send WRs to the send CQ, un-matched recv WRs to the recv CQ) so
-        a mid-flight reset/destroy leaks neither WRs nor CQ sideband."""
+        a mid-flight reset/destroy leaks neither WRs nor CQ sideband.
+
+        Teardown is batch-wise like the datapath: the FLUSH_ERR CQEs for
+        one CQ are encoded in ONE `encode_cqe_batch` and published with
+        ONE ring produce, not one per orphaned WR."""
+        groups: dict[int, tuple] = {}   # id(cq) -> (cq, opcodes, wr_ids)
+
+        def stage(cq, opcode, wr_id):
+            if cq.destroyed:             # nobody left to notify
+                return
+            g = groups.get(id(cq))
+            if g is None:
+                g = groups[id(cq)] = (cq, [], [])
+            g[1].append(opcode)
+            g[2].append(wr_id)
+
         for ps in self.sq:
             self._fc_retire(ps)
-            if not self.send_cq.destroyed:       # nobody left to notify
-                self.send_cq.push(wqe.encode_cqe(
-                    ps.wr.opcode, ps.wr.wr_id, wqe.IBV_WC_WR_FLUSH_ERR, 0))
+            stage(self.send_cq, ps.wr.opcode, ps.wr.wr_id)
         for rwr in self.rq:
-            if not self.recv_cq.destroyed:
-                self.recv_cq.push(wqe.encode_cqe(
-                    wqe.IBV_WC_RECV, rwr.wr_id, wqe.IBV_WC_WR_FLUSH_ERR, 0))
+            stage(self.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id)
         self.sq.clear()
         self.rq.clear()
-        for cq in {id(self.send_cq): self.send_cq,
-                   id(self.recv_cq): self.recv_cq}.values():
-            if cq.destroyed:
-                continue
+        for cq, ops, ids in groups.values():
+            cq.push_batch(wqe.encode_cqe_batch(
+                ops, ids, wqe.IBV_WC_WR_FLUSH_ERR, 0))
             try:
                 cq.flush()
             except CQOverrunError:

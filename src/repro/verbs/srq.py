@@ -31,7 +31,11 @@ class SharedReceiveQueue:
                  on_limit: Callable[["SharedReceiveQueue"], None] | None = None):
         self.max_wr = max_wr
         self.srq_limit = srq_limit
-        self.on_limit = on_limit
+        # limit-event listeners: a fabric-scope pool serves several
+        # tenants (serve engine, kvtransfer, ...), each with its own
+        # refill doorbell — ONE watermark event fans out to all of them
+        self._limit_cbs: list[Callable[["SharedReceiveQueue"], None]] = \
+            [on_limit] if on_limit is not None else []
         self._wrs: deque[RecvWR] = deque()
         self._armed = srq_limit > 0
         self.limit_events = 0
@@ -56,6 +60,35 @@ class SharedReceiveQueue:
         self._armed = srq_limit > 0
         return self
 
+    # -- limit-event listeners ----------------------------------------------
+    @property
+    def on_limit(self):
+        return self._limit_cbs[0] if self._limit_cbs else None
+
+    @on_limit.setter
+    def on_limit(self, cb):
+        if len(self._limit_cbs) > 1:
+            # a fabric-scope pool with several tenants' doorbells: one
+            # client assigning on_limit must not silently wipe the
+            # others' refill callbacks
+            raise QPStateError(
+                f"SRQ has {len(self._limit_cbs)} limit listeners "
+                "(add_on_limit); assigning on_limit would drop them")
+        self._limit_cbs = [cb] if cb is not None else []
+
+    def add_on_limit(self, cb: Callable[["SharedReceiveQueue"], None]):
+        """Register an ADDITIONAL limit listener (fabric-scope pools: one
+        watermark, many tenants' refill doorbells)."""
+        self._limit_cbs.append(cb)
+        return self
+
+    def remove_on_limit(self, cb: Callable[["SharedReceiveQueue"], None]):
+        """Unregister a limit listener (a tenant leaving the pool must
+        not keep firing — or keep the tenant alive via the closure)."""
+        if cb in self._limit_cbs:
+            self._limit_cbs.remove(cb)
+        return self
+
     # -- transport side -----------------------------------------------------
     def attach(self, qp) -> "SharedReceiveQueue":
         if qp not in self.qps:
@@ -74,8 +107,8 @@ class SharedReceiveQueue:
         if self._armed and len(self._wrs) < self.srq_limit:
             self._armed = False
             self.limit_events += 1
-            if self.on_limit is not None:
-                self.on_limit(self)
+            for cb in list(self._limit_cbs):
+                cb(self)
         return wr
 
     def take_many(self, qp_num: int, n: int) -> list[RecvWR]:

@@ -53,6 +53,23 @@ class _Cqe:
     data: Any = None
 
 
+def _submit_stacked(ctx, mr, offs: list, bufs: list, touch):
+    """Submit one accumulated stack of record WRITEs as ONE DMA:
+    duplicate offsets across the stacked entries retire last-writer-wins,
+    exactly like the sequential submissions they replace. Clears the
+    accumulators. Shared by the WRITE-run and SEND-landing paths."""
+    if not offs:
+        return
+    if len(offs) > 1:
+        o, b = dedupe_last_wins(np.concatenate(offs), np.concatenate(bufs))
+    else:
+        o, b = offs[0], bufs[0]
+    ctx.submit_dma("WRITE", mr.name, o, mr.record, buf=b)
+    touch(ctx)
+    offs.clear()
+    bufs.clear()
+
+
 class _CqStage:
     """Struct-of-arrays CQE staging for ONE CQ: the vectorized pass
     appends plain scalars (no per-CQE object) and publication is a
@@ -122,12 +139,23 @@ class LoopbackTransport:
     def process(self, qp: QueuePair) -> int:
         """Drain qp's send queue: execute, coalesce, publish. Returns the
         number of WQEs consumed (SENDs stall in place on RNR)."""
-        if qp.state != QPState.RTS:
-            raise QPStateError(f"flush in {qp.state.name} (need RTS)")
+        return self.process_many([qp])
+
+    def process_many(self, qps: list[QueuePair]) -> int:
+        """ONE processing pass over several QPs' send queues (a fabric
+        flush): CQE staging, read coalescing and destination-context
+        flushes are shared across the whole pass, so completions from
+        many QPs into one CQ publish with ONE ring DMA and DMA runs
+        against one destination context fuse together, grouped per
+        (dst_ctx, opcode) run. For a single QP this is exactly the old
+        per-QP pass."""
+        for qp in qps:
+            if qp.state != QPState.RTS:
+                raise QPStateError(f"flush in {qp.state.name} (need RTS)")
         vec = self.vectorized
         cqes: list[_Cqe] = []               # scalar-oracle staging
         stages: dict[int, _CqStage] = {}    # vectorized: columns per CQ
-        reads: list[tuple[Any, int, Any, SendWR]] = []
+        reads: list[tuple[QueuePair, Any, int, Any, SendWR]] = []
         # id()-keyed so membership checks stay O(1) however many DMAs a
         # pass queues; insertion order IS the flush order
         touched: dict[int, Any] = {}
@@ -150,13 +178,13 @@ class LoopbackTransport:
         def settle():
             # resolve reads: the FIRST wait triggers one coalesced gather
             # per remote region for everything queued this pass (Fig. 16b)
-            for ctx, dma_id, slot, wr in reads:
+            for src_qp, ctx, dma_id, slot, wr in reads:
                 data = ctx.wait_dma_finish(dma_id)
                 if wr.mr is not None and wr.offsets is not None:
-                    qp.ctx.submit_dma("WRITE", wr.mr.name, wr.offsets,
-                                      wr.mr.record,
-                                      buf=self._as_records(wr.mr, data))
-                    touch(qp.ctx)
+                    src_qp.ctx.submit_dma("WRITE", wr.mr.name, wr.offsets,
+                                          wr.mr.record,
+                                          buf=self._as_records(wr.mr, data))
+                    touch(src_qp.ctx)
                 if slot is not None:
                     if vec:
                         slot[0].datas[slot[1]] = data
@@ -187,7 +215,8 @@ class LoopbackTransport:
 
         processed = 0
         try:
-            processed = self._dispatch(qp, stage, reads, touch)
+            for qp in qps:
+                processed += self._dispatch(qp, stage, reads, touch)
         finally:
             settle()        # a mid-pass error must not drop staged work
         return processed
@@ -244,14 +273,43 @@ class LoopbackTransport:
     def _run_sends(self, qp, peer, run, stage, touch) -> int:
         """A run of SENDs claims its recv WRs in ONE batched pool pop
         (`SRQ.take_many` / a single rq drain); a short claim is an RNR
-        stall for the remainder of the run."""
+        stall for the remainder of the run.
+
+        Landings are batch-wise like the WRITE path: the fallible phase
+        gathers every payload first, then `_land_sends` stacks contiguous
+        landings into the SAME posted MR into ONE `submit_dma`. A payload
+        failing mid-gather still delivers the WRs before it (exactly what
+        the element-at-a-time oracle would have done) before re-raising.
+        A SUBMIT-time failure (malformed recv posting) is where the
+        batched path deliberately diverges from the oracle: the whole
+        un-submitted tail — including sideband landings queued behind the
+        failed stack for CQE ordering — rolls back for redelivery rather
+        than completing piecemeal; conservative (a retried sideband WR
+        re-runs `_move_payload`), but never a SUCCESS CQE for data that
+        did not land."""
         n = len(run)
         if peer.srq is not None:
             rwrs = peer.srq.take_many(peer.qp_num, n)
         else:
             k = min(n, len(peer.rq))
             rwrs = [peer.rq.popleft() for _ in range(k)]
-        done = 0
+        landed: list[tuple] = []    # (ps, rwr, payload, off, buf, nbytes)
+        staged = [0]                # landings whose CQEs _land_sends staged
+
+        def release_claims():
+            # retire exactly the WRs whose CQEs are staged (a redelivery
+            # on the next flush would duplicate them) and hand every
+            # other pre-claimed recv WR back to the FRONT of the pool —
+            # the element-at-a-time oracle can't over-claim, so neither
+            # may the batched path
+            unused = rwrs[staged[0]:]
+            if peer.srq is not None:
+                peer.srq.untake(peer.qp_num, unused)
+            else:
+                peer.rq.extendleft(reversed(unused))
+            for _ in range(staged[0]):
+                qp._fc_retire(qp.sq.popleft())
+
         try:
             for ps, rwr in zip(run, rwrs):
                 wr = ps.wr
@@ -262,35 +320,107 @@ class LoopbackTransport:
                 else:
                     payload = self._move_payload(qp, wr)
                     nbytes = 0
-                delivered = payload
+                off = buf = None
                 if rwr.mr is not None:
-                    peer.ctx.submit_dma(
-                        "WRITE", rwr.mr.name, rwr.offsets, rwr.mr.record,
-                        buf=self._as_records(rwr.mr, payload))
-                    touch(peer.ctx)
-                    delivered = None     # landed in memory, not the CQE
-                stage(peer.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id,
-                      wqe.IBV_WC_SUCCESS, nbytes, delivered)
-                if wr.signaled:
-                    stage(qp.send_cq, wqe.IBV_WR_SEND, wr.wr_id,
-                          wqe.IBV_WC_SUCCESS, nbytes)
-                done += 1
+                    # ALL landing validation happens here in the fallible
+                    # phase — offsets normalized, payload reshaped
+                    # (`_as_records` so a bad payload fails exactly like
+                    # the oracle's), numpy staging for the stack (the ONE
+                    # device conversion happens at the fused scatter)
+                    off = np.asarray(rwr.offsets).ravel()
+                    buf = np.asarray(self._as_records(rwr.mr, payload))
+                landed.append((ps, rwr, payload, off, buf, nbytes))
         except BaseException:
-            # payload handling failed mid-run: retire exactly the WRs
-            # that delivered (their CQEs are staged; a redelivery on the
-            # next flush would duplicate them) and hand the pre-claimed
-            # recv WRs of the rest back to the FRONT of the pool — the
-            # element-at-a-time oracle can't over-claim, so neither may
-            # the batched path
-            unused = rwrs[done:]
-            if peer.srq is not None:
-                peer.srq.untake(peer.qp_num, unused)
-            else:
-                peer.rq.extendleft(reversed(unused))
-            for _ in range(done):
-                qp._fc_retire(qp.sq.popleft())
+            # payload/landing prep failed mid-run: deliver the gathered
+            # prefix (exactly what the oracle would have delivered),
+            # then release the claims — even if that delivery itself
+            # fails
+            try:
+                self._land_sends(qp, peer, landed, stage, touch, staged)
+            finally:
+                release_claims()
+            raise
+        try:
+            self._land_sends(qp, peer, landed, stage, touch, staged)
+        except BaseException:
+            release_claims()
             raise
         return len(rwrs)
+
+    def _land_sends(self, qp, peer, landed, stage, touch, staged):
+        """Deliver a prepared SEND run: stack contiguous landings into
+        one posted MR into ONE `submit_dma` (duplicate offsets retire
+        last-writer-wins, like sequential landings). A broadcasting
+        landing (payload rows != posted offsets) keeps its own DMA.
+
+        A landing's SUCCESS CQEs stage only AFTER the DMA carrying it
+        was submitted: stage calls queue in `pending` (delivery order
+        preserved — sideband landings ride the queue too) and drain at
+        each stack flush, so a submit-time failure leaves the affected
+        WRs un-staged and un-retired (`staged[0]` counts delivered
+        landings for the caller's claim accounting) — queued for retry,
+        never completed-but-not-landed."""
+        if not any(rwr.mr is not None for _, rwr, *_ in landed):
+            # no MR landings (the serve/submit hot path: sideband-only
+            # deliveries): nothing can fail at submit time, stage
+            # directly without the stacking/pending machinery
+            for ps, rwr, payload, off, buf, nbytes in landed:
+                stage(peer.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id,
+                      wqe.IBV_WC_SUCCESS, nbytes, payload)
+                if ps.wr.signaled:
+                    stage(qp.send_cq, wqe.IBV_WR_SEND, ps.wr.wr_id,
+                          wqe.IBV_WC_SUCCESS, nbytes)
+                staged[0] += 1
+            return
+        offs: list[np.ndarray] = []
+        bufs: list = []
+        cur_mr = None
+        pending: list[list[tuple]] = []    # per-landing stage calls
+
+        def drain_pending():
+            for calls in pending:
+                for args in calls:
+                    stage(*args)
+                staged[0] += 1
+            pending.clear()
+
+        def flush_stack():
+            nonlocal cur_mr
+            if cur_mr is not None:
+                _submit_stacked(peer.ctx, cur_mr, offs, bufs, touch)
+                cur_mr = None
+            drain_pending()
+
+        for ps, rwr, payload, off, buf, nbytes in landed:
+            calls = []
+            delivered = payload
+            broadcast = False
+            if rwr.mr is not None:
+                delivered = None         # landed in memory, not the CQE
+                if buf.shape[0] == off.size:
+                    if cur_mr is not None and cur_mr is not rwr.mr:
+                        flush_stack()
+                    cur_mr = rwr.mr
+                    offs.append(off)
+                    bufs.append(buf)
+                else:                    # broadcasting: submit alone
+                    flush_stack()
+                    peer.ctx.submit_dma("WRITE", rwr.mr.name, rwr.offsets,
+                                        rwr.mr.record, buf=buf)
+                    touch(peer.ctx)
+                    broadcast = True
+            calls.append((peer.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id,
+                          wqe.IBV_WC_SUCCESS, nbytes, delivered))
+            if ps.wr.signaled:
+                calls.append((qp.send_cq, wqe.IBV_WR_SEND, ps.wr.wr_id,
+                              wqe.IBV_WC_SUCCESS, nbytes))
+            pending.append(calls)
+            if broadcast:
+                # its DMA is already submitted: stage NOW, so a later
+                # stack failure cannot leave it landed-but-unretired
+                # (a redelivery would run the DMA twice)
+                drain_pending()
+        flush_stack()
 
     def _run_writes(self, qp, peer, run, stage, touch) -> int:
         """Consecutive WRITEs to one remote MR fuse into ONE stacked
@@ -335,20 +465,7 @@ class LoopbackTransport:
                 bufs: list = []
 
                 def flush_stack():
-                    if not offs:
-                        return
-                    if len(offs) > 1:
-                        # duplicate targets across fused WRs retire
-                        # last-writer-wins, like sequential scatters
-                        o, b = dedupe_last_wins(np.concatenate(offs),
-                                                np.concatenate(bufs))
-                    else:
-                        o, b = offs[0], bufs[0]
-                    peer.ctx.submit_dma("WRITE", mr.name, o, mr.record,
-                                        buf=b)
-                    touch(peer.ctx)
-                    offs.clear()
-                    bufs.clear()
+                    _submit_stacked(peer.ctx, mr, offs, bufs, touch)
 
                 for ps, off, buf in srcs:
                     wr = ps.wr
@@ -390,7 +507,7 @@ class LoopbackTransport:
                     slot = stage(qp.send_cq, wr.opcode, wr.wr_id,
                                  wqe.IBV_WC_SUCCESS,
                                  int(np.asarray(wr.remote_offsets).size))
-                reads.append((peer.ctx, dma_id, slot, wr))
+                reads.append((qp, peer.ctx, dma_id, slot, wr))
                 done += 1
         except BaseException:
             # a bad WR mid-run: retire the WRs whose CQEs are staged so
@@ -472,7 +589,7 @@ class LoopbackTransport:
                         slot = stage(qp.send_cq, wr.opcode, wr.wr_id,
                                      wqe.IBV_WC_SUCCESS,
                                      int(np.asarray(wr.remote_offsets).size))
-                    reads.append((peer.ctx, dma_id, slot, wr))
+                    reads.append((qp, peer.ctx, dma_id, slot, wr))
             else:
                 raise ValueError(f"unknown opcode {wr.opcode:#x}")
             qp.sq.popleft()
@@ -501,9 +618,54 @@ class MeshTransport(LoopbackTransport):
         return fn(payload, wr.spec_tree, self.plan)
 
 
+def two_sided_send(send_qp: QueuePair, flush, server_qp: QueuePair,
+                   recv_cq: CompletionQueue, payloads: list, *,
+                   wr_id: int = 0, spec_tree=None,
+                   inline: bool | None = None):
+    """Shared body of the send/send_many conveniences (VerbsPair and
+    FabricEndpoint): top the recv side up to the batch size (the
+    server's SRQ pool, else its rq), post the whole list as ONE WQE
+    chain (one doorbell write, one descriptor-fetch DMA), flush, and
+    drain the recv CQ until every completion arrived — a batch can
+    outsize the CQ ring, and each poll republishes one ring's worth of
+    staged backlog. Returns the recv completions in posting order."""
+    if not payloads:
+        return []
+    need = len(payloads)
+    pool = server_qp.srq
+    if pool is not None:
+        if len(pool) < need:
+            pool.post_recv([RecvWR(wr_id=wr_id + i)
+                            for i in range(len(pool), need)])
+    else:
+        while len(server_qp.rq) < need:
+            server_qp.post_recv(RecvWR(wr_id=wr_id + len(server_qp.rq)))
+    send_qp.post_send([SendWR(wr_id=wr_id + i, payload=p,
+                              spec_tree=spec_tree, inline=inline)
+                       for i, p in enumerate(payloads)])
+    flush()
+    wcs = recv_cq.poll()
+    while len(wcs) < need:
+        more = recv_cq.poll()
+        if not more:
+            break
+        wcs += more
+    return wcs
+
+
 def connect(a: QueuePair, b: QueuePair, transport: LoopbackTransport):
     """Run the RC handshake for a local pair: both sides RESET -> INIT ->
-    RTR(dest) -> RTS on the given transport."""
+    RTR(dest) -> RTS on the given transport.
+
+    Both QPs must live on THIS transport: silently re-homing a QP that
+    is already attached elsewhere would leave a stale registration behind
+    and the mismatch would surface only at the first post_send — validate
+    up front, before any state transitions."""
+    for qp in (a, b):
+        if qp.transport is not None and qp.transport is not transport:
+            raise QPStateError(
+                f"QP {qp.qp_num} is already attached to a different "
+                "transport; detach (destroy) it before reconnecting")
     transport.attach(a)
     transport.attach(b)
     a.modify(QPState.INIT)
@@ -557,15 +719,9 @@ class VerbsPair:
         """Two-sided SEND client -> server; server-side recv completion is
         returned (the recv side — SRQ pool or per-QP rq — is topped up
         automatically)."""
-        if self.srq is not None:
-            if not len(self.srq):
-                self.srq.post_recv(RecvWR(wr_id=wr_id))
-        elif not self.server.rq:
-            self.server.post_recv(RecvWR(wr_id=wr_id))
-        self.client.post_send(SendWR(wr_id=wr_id, payload=payload,
-                                     spec_tree=spec_tree, inline=inline))
-        self.client.flush()
-        wcs = self.server_recv_cq.poll()
+        wcs = two_sided_send(self.client, self.client.flush, self.server,
+                             self.server_recv_cq, [payload], wr_id=wr_id,
+                             spec_tree=spec_tree, inline=inline)
         assert wcs, "send was not delivered (RNR?)"
         return wcs[-1]
 
@@ -575,28 +731,10 @@ class VerbsPair:
         ONE WQE chain (one doorbell write, one descriptor-fetch DMA) and
         the recv side is topped up to match. WRs are numbered wr_id,
         wr_id+1, ... . Returns the recv completions in posting order."""
-        if not payloads:
-            return []
-        need = len(payloads)
-        if self.srq is not None:
-            if len(self.srq) < need:
-                self.srq.post_recv([RecvWR(wr_id=wr_id + i) for i in
-                                    range(len(self.srq), need)])
-        else:
-            while len(self.server.rq) < need:
-                self.server.post_recv(
-                    RecvWR(wr_id=wr_id + len(self.server.rq)))
-        self.client.post_send([SendWR(wr_id=wr_id + i, payload=p,
-                                      spec_tree=spec_tree, inline=inline)
-                               for i, p in enumerate(payloads)])
-        self.client.flush()
-        # a batch can outsize the CQ ring: each poll republishes one
-        # ring's worth of staged backlog, so drain until dry
-        wcs = self.server_recv_cq.poll()
-        while len(wcs) < need:
-            more = self.server_recv_cq.poll()
-            if not more:
-                break
-            wcs += more
-        assert len(wcs) == need, f"{len(wcs)}/{need} delivered (RNR?)"
+        wcs = two_sided_send(self.client, self.client.flush, self.server,
+                             self.server_recv_cq, payloads, wr_id=wr_id,
+                             spec_tree=spec_tree, inline=inline)
+        if payloads:
+            assert len(wcs) == len(payloads), \
+                f"{len(wcs)}/{len(payloads)} delivered (RNR?)"
         return wcs

@@ -1,0 +1,642 @@
+"""ISSUE 5 — routed multi-pod fabric (CM bring-up, addressed QPs,
+fabric-scope SRQ, RNR retry/backoff) + the satellite paths (batched
+RecvWR-MR landings, vectorized FLUSH_ERR teardown, connect validation).
+
+Fabric-routed delivery must be bit-exact against direct-connect
+`LoopbackTransport` across opcode mixes, multi-destination chains and
+RNR-with-retry schedules."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline rig: sampled fallback
+    from _hyp import given, settings, st
+
+from repro import verbs
+from repro.verbs.fabric import FabricAddress
+
+
+# -- connection manager ------------------------------------------------------
+def test_cm_connect_produces_rts_qps_and_routes():
+    """fabric.connect(addr) hands back a ready endpoint: both QPs in
+    RTS, routes installed both ways — the CM drove the whole ladder."""
+    f = verbs.Fabric(pods=2)
+    addr = f.node("pod1/dev0").listen("svc", depth=32)
+    ep = f.connect(addr)
+    assert ep.qp.state == verbs.QPState.RTS
+    assert ep.peer.qp.state == verbs.QPState.RTS
+    assert f.routes[ep.qp.qp_num] == ep.peer.address
+    assert f.routes[ep.peer.qp.qp_num] == ep.address
+    assert ep.address.gid == "pod0/dev0"
+    assert ep.remote.gid == "pod1/dev0"
+    # and the connection works without any further setup
+    wc = ep.send(np.array([1, 2], np.int32), wr_id=3)
+    assert wc.ok and wc.wr_id == 3
+
+
+def test_cm_resolve_by_service_name():
+    f = verbs.Fabric(pods=2)
+    addr = f.node("pod1/dev0").listen("kv", depth=32)
+    assert f.node("pod0/dev0").resolve("kv") == addr
+    ep = f.connect("kv")                 # connect by name
+    assert ep.remote.gid == "pod1/dev0"
+    with pytest.raises(verbs.QPStateError):
+        f.node("pod0/dev0").resolve("nope")
+    with pytest.raises(verbs.QPStateError):
+        f.node("pod1/dev0").listen("kv")     # duplicate service
+
+
+def test_addressed_bare_qp_connect():
+    """A RESET QP registered at a fabric address is directly
+    connectable — the CM drives ITS ladder too."""
+    f = verbs.Fabric(pods=2)
+    pd = verbs.ProtectionDomain()
+    qp = verbs.QueuePair(pd, verbs.CompletionQueue(32),
+                         verbs.CompletionQueue(32))
+    addr = f.register_qp(qp, "pod1/dev0")
+    assert addr == FabricAddress("pod1/dev0", qp.qp_num)
+    ep = f.connect(addr)
+    assert qp.state == verbs.QPState.RTS
+    qp.post_recv(verbs.RecvWR(wr_id=8))
+    ep.post_send(verbs.SendWR(wr_id=8, payload=np.array([5], np.int64)))
+    ep.flush()
+    wcs = qp.recv_cq.poll()
+    assert [w.wr_id for w in wcs] == [8]
+    # a second connect to the SAME (now-RTS) QP is refused
+    with pytest.raises(verbs.QPStateError):
+        f.connect(addr)
+
+
+def test_unknown_address_refused():
+    f = verbs.Fabric(pods=2)
+    with pytest.raises(verbs.QPStateError):
+        f.connect(FabricAddress("pod1/dev0", 424242))
+    with pytest.raises(verbs.QPStateError):
+        f.node("podX/dev9")              # not on the grid
+
+
+def test_failed_connect_leaks_no_qp_context():
+    """A connect to a dead address (a retry loop against a service that
+    is not listening yet) must not mint client QPs: the engine context
+    table and the fabric registries stay untouched."""
+    f = verbs.Fabric(pods=2)
+    cm = f.node("pod0/dev0")
+    n_ctx = len(cm.pd.engine._qps)
+    for _ in range(5):
+        with pytest.raises(verbs.QPStateError):
+            cm.connect(FabricAddress("pod1/dev0", 424242))
+    assert len(cm.pd.engine._qps) == n_ctx
+    assert not f.qps and not f.routes and not f.gid_of
+
+
+# -- routed delivery: bit-exact vs direct-connect ----------------------------
+_KINDS = ["send_inline", "send_big", "send_unsig", "write", "write_bad",
+          "read"]
+
+
+def _make_wrs(kinds, rkey, rng):
+    wrs = []
+    for i, kind in enumerate(kinds):
+        if kind == "send_inline":
+            wrs.append(verbs.SendWR(wr_id=i, payload=np.array(
+                [i, 7, i * i], np.int32)))
+        elif kind == "send_big":
+            wrs.append(verbs.SendWR(wr_id=i, inline=False, payload=rng
+                       .standard_normal(40).astype(np.float32)))
+        elif kind == "send_unsig":
+            wrs.append(verbs.SendWR(wr_id=i, signaled=False,
+                                    payload=np.array([i], np.int64)))
+        elif kind in ("write", "write_bad"):
+            k = int(rng.integers(1, 4))
+            offs = rng.choice(8, size=k, replace=False)
+            wrs.append(verbs.SendWR(
+                wr_id=i, opcode=verbs.IBV_WR_RDMA_WRITE,
+                remote_key=0xDEAD if kind == "write_bad" else rkey,
+                remote_offsets=offs,
+                payload=rng.standard_normal((k, 4)).astype(np.float32)))
+        elif kind == "read":
+            k = int(rng.integers(1, 4))
+            wrs.append(verbs.SendWR(
+                wr_id=i, opcode=verbs.IBV_WR_RDMA_READ, remote_key=rkey,
+                remote_offsets=rng.choice(8, size=k, replace=False)))
+    return wrs
+
+
+def _observe(flushed, stalled, send_wcs, recv_wcs, region):
+    return dict(
+        flushed=flushed, stalled=stalled, region=np.asarray(region),
+        send_wcs=[(w.wr_id, w.opcode, w.status, w.length,
+                   None if w.data is None else np.asarray(w.data))
+                  for w in send_wcs],
+        recv_wcs=[(w.wr_id, w.opcode, w.status, w.length,
+                   None if w.data is None else np.asarray(w.data))
+                  for w in recv_wcs])
+
+
+def _run_fabric(kinds, n_recv, seed):
+    verbs.ProtectionDomain._next_key = 0x7000
+    f = verbs.Fabric(pods=2)
+    cm = f.node("pod1/dev0")
+    dst = cm.pd.reg_mr("dst", np.zeros((8, 4), np.float32))
+    addr = cm.listen(depth=1024, max_wr=256, srq=None)
+    ep = f.connect(addr, depth=1024, max_wr=256)
+    for i in range(n_recv):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=100 + i))
+    rng = np.random.default_rng(seed)
+    ep.post_send(_make_wrs(kinds, dst.rkey, rng))
+    flushed = ep.flush()
+    return _observe(flushed, len(ep.qp.sq), ep.poll(),
+                    ep.peer.recv_cq.poll(),
+                    cm.pd.engine.regions["dst"])
+
+
+def _run_direct(kinds, n_recv, seed):
+    verbs.ProtectionDomain._next_key = 0x7000
+    pair = verbs.VerbsPair(depth=1024, publish_every=8, max_wr=256)
+    dst = pair.pd.reg_mr("dst", np.zeros((8, 4), np.float32))
+    for i in range(n_recv):
+        pair.server.post_recv(verbs.RecvWR(wr_id=100 + i))
+    rng = np.random.default_rng(seed)
+    pair.client.post_send(_make_wrs(kinds, dst.rkey, rng))
+    flushed = pair.client.flush()
+    return _observe(flushed, len(pair.client.sq), pair.client_cq.poll(),
+                    pair.server_recv_cq.poll(),
+                    pair.pd.engine.regions["dst"])
+
+
+def _assert_same(a, b):
+    assert a["flushed"] == b["flushed"]
+    assert a["stalled"] == b["stalled"]
+    np.testing.assert_array_equal(a["region"], b["region"])
+    for key in ("send_wcs", "recv_wcs"):
+        assert len(a[key]) == len(b[key]), key
+        for x, y in zip(a[key], b[key]):
+            assert x[:4] == y[:4], key
+            if x[4] is None or y[4] is None:
+                assert x[4] is None and y[4] is None
+            else:
+                np.testing.assert_array_equal(x[4], y[4])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(_KINDS), min_size=1, max_size=24),
+       st.integers(0, 24))
+def test_fabric_routed_delivery_bit_exact(kinds, n_recv):
+    """Random opcode mixes + random recv budgets (mid-chain RNR stalls):
+    completions, MR contents and stall points through the routed fabric
+    match direct-connect LoopbackTransport exactly."""
+    seed = len(kinds) * 101 + n_recv
+    _assert_same(_run_fabric(kinds, n_recv, seed),
+                 _run_direct(kinds, n_recv, seed))
+
+
+# -- multi-destination chains ------------------------------------------------
+def test_multi_destination_pass_fuses_per_destination():
+    """One fabric pass over chains to 4 pods: each 16-WR WRITE chain
+    cost ONE descriptor fetch and ONE fused scatter at its destination
+    context — batch-wise dispatch survives the routing layer."""
+    f = verbs.Fabric(pods=4)
+    eps, mrs = [], []
+    for p in range(4):
+        cm = f.node(f"pod{p}/dev0")
+        mrs.append(cm.pd.reg_mr(f"dst{p}", np.zeros((16, 4), np.float32)))
+        eps.append(f.connect(cm.listen(depth=64, srq=None), depth=64))
+    for i, (ep, mr) in enumerate(zip(eps, mrs)):
+        ep.post_send([verbs.SendWR(
+            wr_id=j, opcode=verbs.IBV_WR_RDMA_WRITE, remote_key=mr.rkey,
+            remote_offsets=[j],
+            payload=np.full((1, 4), float(10 * i + j), np.float32),
+            signaled=False) for j in range(16)])
+    assert f.flush(*eps) == 64
+    for i, (ep, mr) in enumerate(zip(eps, mrs)):
+        assert ep.qp.desc_fetch_dmas == 1          # 1/N per 16-WR chain
+        assert ep.peer.qp.ctx.dma_launches == 1    # ONE scatter per dst
+        got = np.asarray(ep.peer.qp.pd.engine.regions[f"dst{i}"])
+        np.testing.assert_allclose(
+            got[:, 0], 10 * i + np.arange(16, dtype=np.float32))
+
+
+def test_multi_destination_shared_cq_publishes_once():
+    """Endpoints completing into ONE send CQ publish the whole fabric
+    pass with one ring DMA (per-CQ CQE blocks span destinations)."""
+    f = verbs.Fabric(pods=2)
+    cq = verbs.CompletionQueue(256, publish_every=64)
+    pd = verbs.ProtectionDomain()
+    eps = []
+    for p in range(2):
+        cm = f.node(f"pod{p}/dev0")
+        addr = cm.listen(depth=64, srq=None)
+        # both client QPs share pd + send CQ (multi-destination client)
+        qp = verbs.QueuePair(pd, cq, verbs.CompletionQueue(64))
+        f.register_qp(qp, "pod0/dev0")
+        server, _ = f._accept(addr)
+        for side, dest in ((server.qp, qp.qp_num), (qp, server.qp.qp_num)):
+            side.modify(verbs.QPState.INIT)
+            side.modify(verbs.QPState.RTR, dest_qp_num=dest)
+            side.modify(verbs.QPState.RTS)
+        f.routes[qp.qp_num] = server.address
+        f.routes[server.qp.qp_num] = FabricAddress("pod0/dev0", qp.qp_num)
+        eps.append((qp, server))
+    for qp, server in eps:
+        server.qp.post_recv(verbs.RecvWR())
+        qp.post_send(verbs.SendWR(payload=np.array([1], np.int64)))
+    w0 = cq.ring.dma_writes
+    f.process_many([qp for qp, _ in eps])
+    assert cq.ring.dma_writes - w0 == 1
+    assert len(cq.poll()) == 2
+
+
+# -- RNR retry/backoff -------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 6))
+def test_rnr_retry_schedule(refill_at, budget):
+    """A SEND into an empty pool succeeds iff the receiver refills
+    within the retry budget; the retry/exhaustion counters follow the
+    schedule exactly, and exhaustion surfaces IBV_WC_RNR_ERR through
+    poll_cq."""
+    def refill(qp, tries):
+        if tries == refill_at:
+            ep.peer.qp.rq.append(verbs.RecvWR(wr_id=55))
+
+    f = verbs.Fabric(rnr_retry=budget, on_rnr_backoff=refill)
+    addr = f.node(f.gids[0]).listen(depth=32, srq=None)
+    ep = f.connect(addr, depth=32)
+    ep.post_send(verbs.SendWR(wr_id=9, payload=np.array([4], np.int64)))
+    ep.flush()
+    delivered = ep.peer.recv_cq.poll()
+    if refill_at <= budget:                     # receiver caught up
+        assert [w.wr_id for w in delivered] == [55]
+        assert f.rnr_retries == ep.qp.rnr_retries == refill_at
+        assert f.rnr_exhausted == 0
+        assert not ep.qp.sq
+        send_wcs = ep.poll()
+        assert [(w.wr_id, w.status) for w in send_wcs] == \
+               [(9, verbs.IBV_WC_SUCCESS)]
+    else:                                       # budget exhausted
+        assert delivered == []
+        assert f.rnr_retries == budget
+        assert f.rnr_exhausted == ep.qp.rnr_exhausted == 1
+        assert not ep.qp.sq                     # no wedged queue
+        send_wcs = ep.poll()
+        assert [(w.wr_id, w.status) for w in send_wcs] == \
+               [(9, verbs.IBV_WC_RNR_ERR)]
+    # exponential backoff: 1 + 2 + 4 + ... units consumed
+    steps = min(refill_at, budget)
+    assert f.rnr_backoff_units == (1 << steps) - 1
+
+
+def test_rnr_infinite_budget_stalls_in_place():
+    """rnr_retry=7 is the ibverbs 'retry forever' sentinel: the SEND
+    stays queued (pre-fabric stall semantics), nothing errors."""
+    f = verbs.Fabric()                          # default budget: infinite
+    addr = f.node(f.gids[0]).listen(depth=32, srq=None)
+    ep = f.connect(addr, depth=32)
+    ep.post_send(verbs.SendWR(wr_id=1, payload=np.array([2], np.int64)))
+    assert ep.flush() == 0
+    assert len(ep.qp.sq) == 1 and f.rnr_exhausted == 0
+    ep.peer.qp.rq.append(verbs.RecvWR(wr_id=3))
+    assert ep.flush() == 1                      # delivers on the retry
+    assert [w.wr_id for w in ep.peer.recv_cq.poll()] == [3]
+
+
+def test_rnr_exhaustion_unblocks_chain_behind_it_same_flush():
+    """[SEND, RDMA_WRITE] with no recv buffers and a zero retry budget:
+    ONE flush retires the SEND with RNR_ERR and still lands the WRITE —
+    dispatchable work queued behind the dead head must not wait for the
+    next doorbell."""
+    f = verbs.Fabric(rnr_retry=0)
+    cm = f.node(f.gids[0])
+    mr = cm.pd.reg_mr("dst", np.zeros((4, 2), np.float32))
+    ep = f.connect(cm.listen(depth=32, srq=None), depth=32)
+    ep.post_send([
+        verbs.SendWR(wr_id=0, payload=np.array([1], np.int64)),
+        verbs.SendWR(wr_id=1, opcode=verbs.IBV_WR_RDMA_WRITE,
+                     remote_key=mr.rkey, remote_offsets=[2],
+                     payload=np.full((1, 2), 7.0, np.float32))])
+    assert ep.flush() == 2                  # both consumed in ONE flush
+    assert not ep.qp.sq
+    wcs = {w.wr_id: w.status for w in ep.poll()}
+    assert wcs == {0: verbs.IBV_WC_RNR_ERR, 1: verbs.IBV_WC_SUCCESS}
+    np.testing.assert_allclose(
+        np.asarray(cm.pd.engine.regions["dst"])[2], 7.0)
+
+
+def test_rnr_exhaustion_releases_flow_control_credit():
+    f = verbs.Fabric(rnr_retry=0)
+    addr = f.node(f.gids[0]).listen(depth=8, srq=None, flow_control=True)
+    ep = f.connect(addr, depth=8, flow_control=True)
+    ep.post_send(verbs.SendWR(wr_id=1, payload=np.array([1], np.int64)))
+    ep.flush()                                  # immediate RNR_ERR
+    assert f.rnr_exhausted == 1
+    # the reservation must be gone: credit = capacity - occupancy only
+    assert ep.peer.recv_cq.fc_reserved == 0
+    assert ep.send_cq.fc_reserved == 0
+
+
+# -- fabric-scope SRQ --------------------------------------------------------
+def test_fabric_scope_srq_serves_two_tenants_pool_fifo():
+    """Two listeners ("engines") on one fabric draw from ONE pool:
+    delivery is pool-FIFO across tenants, per-QP takes recorded."""
+    f = verbs.Fabric(srq_max_wr=64)
+    pool = f.shared_srq()
+    pool.post_recv([verbs.RecvWR(wr_id=i) for i in range(4)])
+    eps = [f.connect(f.node(f.gids[0]).listen(depth=64, srq="fabric"),
+                     depth=64) for _ in range(2)]
+    for j, ep in enumerate(eps):
+        ep.post_send([verbs.SendWR(payload=np.array([j], np.int64),
+                                   signaled=False),
+                      verbs.SendWR(payload=np.array([j + 10], np.int64),
+                                   signaled=False)])
+        ep.flush()
+    wcs = [w for ep in eps for w in ep.peer.recv_cq.poll()]
+    assert sorted(w.wr_id for w in wcs) == [0, 1, 2, 3]
+    assert len(pool) == 0
+    for ep in eps:
+        assert pool.taken_by_qp[ep.peer.qp.qp_num] == 2
+
+
+def test_fabric_srq_single_watermark_fans_out_to_all_tenants():
+    """ONE srq_limit event refills EVERY tenant's doorbell callback."""
+    f = verbs.Fabric(srq_max_wr=64)
+    hits = []
+    f.on_srq_limit(lambda s: hits.append("a"))
+    f.on_srq_limit(lambda s: (hits.append("b"), s.post_recv(
+        [verbs.RecvWR(wr_id=90 + i) for i in range(4)])))
+    pool = f.shared_srq()
+    pool.post_recv([verbs.RecvWR(wr_id=i) for i in range(3)])
+    pool.arm(3)
+    ep = f.connect(f.node(f.gids[0]).listen(depth=64, srq="fabric"),
+                   depth=64)
+    ep.post_send(verbs.SendWR(payload=np.array([1], np.int64),
+                              signaled=False))
+    ep.flush()
+    assert hits == ["a", "b"]                   # one event, every tenant
+    assert pool.limit_events == 1
+
+
+def test_fabric_srq_backpressure_not_overrun_across_tenants():
+    """Overload two flow-controlled tenants sharing the pool: ENOMEM
+    backpressure events, zero CQ overruns, everything delivered."""
+    f = verbs.Fabric(srq_max_wr=32)
+    pool = f.shared_srq()
+    pool.post_recv([verbs.RecvWR() for _ in range(32)])
+    pool.arm(4)
+    f.on_srq_limit(lambda s: s.post_recv(
+        [verbs.RecvWR() for _ in range(32 - len(s))]).arm(4))
+    eps = [f.connect(f.node(f.gids[0]).listen(
+        depth=16, srq="fabric", flow_control=True),
+        depth=16, max_wr=512, flow_control=True) for _ in range(2)]
+    total_per_ep, sent = 64, [0, 0]
+    delivered = backpressured = 0
+    while delivered < 2 * total_per_ep:
+        progressed = False
+        for j, ep in enumerate(eps):
+            if sent[j] >= total_per_ep:
+                continue
+            try:
+                ep.post_send(verbs.SendWR(
+                    payload=np.array([sent[j]], np.int64), signaled=False))
+                sent[j] += 1
+                progressed = True
+            except verbs.ENOMEMError:
+                backpressured += 1
+        if not progressed:
+            for ep in eps:
+                ep.flush()
+            delivered += sum(len(ep.peer.recv_cq.poll()) for ep in eps)
+    assert backpressured > 0
+    assert delivered == 2 * total_per_ep
+
+
+# -- teardown: connections must not accrete on a long-lived fabric -----------
+def test_disconnect_releases_every_fabric_registration():
+    f = verbs.Fabric(srq_max_wr=32)
+    addr = f.node(f.gids[0]).listen("svc", depth=32, srq="fabric")
+    ep = f.connect(addr, depth=32)
+    qpns = {ep.qp.qp_num, ep.peer.qp.qp_num}
+    pool = f.shared_srq()
+    assert ep.peer.qp in pool.qps
+    f.disconnect(ep)
+    assert not qpns & set(f.routes)
+    assert not qpns & set(f.gid_of)
+    assert not qpns & set(f.qps)
+    assert ep.peer.qp not in pool.qps
+    assert ep.peer not in f._listeners[addr.qpn].accepted
+    # the listener survives a disconnect; unlisten closes it
+    ep2 = f.connect(addr, depth=32)
+    assert ep2.qp.state == verbs.QPState.RTS
+    f.disconnect(ep2)
+    f.unlisten(addr)
+    with pytest.raises(verbs.QPStateError):
+        f.connect(addr, depth=32)
+    with pytest.raises(verbs.QPStateError):
+        f.node(f.gids[0]).resolve("svc")     # service name released
+
+
+def test_send_refuses_shared_listener_cq_with_many_connections():
+    """send()/send_many() drain the peer's recv CQ and attribute every
+    completion to their own connection — with TWO connections accepted
+    on one listener (one shared recv CQ) that would cross-consume, so
+    it must refuse loudly instead."""
+    f = verbs.Fabric(srq_max_wr=64)
+    addr = f.node(f.gids[0]).listen(depth=64, srq="fabric")
+    ep1 = f.connect(addr, depth=64)
+    wc = ep1.send(np.array([1], np.int64), wr_id=1)   # sole tenant: fine
+    assert wc.ok
+    ep2 = f.connect(addr, depth=64)
+    for ep in (ep1, ep2):
+        with pytest.raises(verbs.QPStateError):
+            ep.send(np.array([2], np.int64))
+        with pytest.raises(verbs.QPStateError):
+            ep.send_many([np.array([3], np.int64)])
+    f.disconnect(ep2)                    # back to one connection: fine
+    assert ep1.send(np.array([4], np.int64), wr_id=2).ok
+
+
+def test_on_limit_setter_refuses_to_wipe_multi_tenant_listeners():
+    """A legacy `pool.on_limit = cb` assignment on a shared pool with
+    several add_on_limit tenants must refuse instead of silently
+    dropping their refill doorbells."""
+    pool = verbs.SharedReceiveQueue(max_wr=8)
+    pool.on_limit = lambda s: None           # single listener: fine
+    pool.add_on_limit(lambda s: None)
+    with pytest.raises(verbs.QPStateError):
+        pool.on_limit = lambda s: None
+    pool.remove_on_limit(pool._limit_cbs[1])
+    pool.on_limit = None                     # back to one: assignable
+    assert pool.on_limit is None
+
+
+# -- satellite: batched RecvWR-MR landing path -------------------------------
+@pytest.mark.parametrize("use_srq", [False, True])
+def test_send_run_into_posted_mrs_lands_in_one_dma(use_srq):
+    """A SEND run landing in per-WR posted MRs submits ONE stacked DMA
+    (it used to be one per WR), and the landed bytes are exact."""
+    srq = verbs.SharedReceiveQueue(max_wr=64) if use_srq else None
+    pair = verbs.VerbsPair(depth=256, srq=srq)
+    mr = pair.pd.reg_mr("land", np.zeros((16, 4), np.float32))
+    recvs = [verbs.RecvWR(wr_id=i, mr=mr, offsets=[i]) for i in range(8)]
+    if use_srq:
+        srq.post_recv(recvs)
+    else:
+        for r in recvs:
+            pair.server.post_recv(r)
+    q0 = len(pair.server.ctx._dma_queue)
+    pair.client.post_send([verbs.SendWR(
+        wr_id=i, inline=False,
+        payload=np.full((1, 4), float(i), np.float32), signaled=False)
+        for i in range(8)])
+    pair.client.flush()
+    assert len(pair.server.ctx._dma_queue) - q0 == 1    # ONE stacked DMA
+    assert [w.wr_id for w in pair.server_recv_cq.poll()] == list(range(8))
+    got = np.asarray(pair.pd.engine.regions["land"])
+    np.testing.assert_allclose(got[:8, 0], np.arange(8, dtype=np.float32))
+
+
+def test_send_landing_stack_breaks_at_mr_boundary_and_dedupes():
+    """Landings alternate MRs -> the stack flushes per contiguous run;
+    duplicate offsets inside one run retire last-writer-wins (exactly
+    like the sequential per-WR landings of the oracle)."""
+    pair = verbs.VerbsPair(depth=256)
+    a = pair.pd.reg_mr("la", np.zeros((4, 2), np.float32))
+    b = pair.pd.reg_mr("lb", np.zeros((4, 2), np.float32))
+    for rwr in [verbs.RecvWR(wr_id=0, mr=a, offsets=[1]),
+                verbs.RecvWR(wr_id=1, mr=a, offsets=[1]),   # dup offset
+                verbs.RecvWR(wr_id=2, mr=b, offsets=[2]),
+                verbs.RecvWR(wr_id=3, mr=a, offsets=[3])]:
+        pair.server.post_recv(rwr)
+    q0 = len(pair.server.ctx._dma_queue)
+    pair.client.post_send([verbs.SendWR(
+        wr_id=i, inline=False,
+        payload=np.full((1, 2), float(i + 1), np.float32), signaled=False)
+        for i in range(4)])
+    pair.client.flush()
+    # runs: [a,a] [b] [a] -> 3 DMA submissions
+    assert len(pair.server.ctx._dma_queue) - q0 == 3
+    pair.server_recv_cq.poll()
+    np.testing.assert_allclose(
+        np.asarray(pair.pd.engine.regions["la"])[1], 2.0)   # last writer
+    np.testing.assert_allclose(
+        np.asarray(pair.pd.engine.regions["lb"])[2], 3.0)
+    np.testing.assert_allclose(
+        np.asarray(pair.pd.engine.regions["la"])[3], 4.0)
+
+
+def test_malformed_recv_offsets_fail_without_phantom_success():
+    """A landing DMA that fails at submit time (malformed RecvWR
+    offsets) must not complete ANY WR of the failed stack: no SUCCESS
+    CQE for data that never landed, every claimed recv WR handed back
+    in pool order, the send queue intact — and delivery resumes once
+    the receiver drops its bad posting."""
+    srq = verbs.SharedReceiveQueue(max_wr=16)
+    pair = verbs.VerbsPair(srq=srq)
+    mr = pair.pd.reg_mr("land", np.zeros((4, 2), np.float32))
+    srq.post_recv([verbs.RecvWR(wr_id=0, mr=mr, offsets=["bad"]),
+                   verbs.RecvWR(wr_id=1)])
+    pair.client.post_send([
+        verbs.SendWR(wr_id=0, inline=False,
+                     payload=np.zeros((1, 2), np.float32)),
+        verbs.SendWR(wr_id=1, payload=np.array([3], np.int64))])
+    with pytest.raises((ValueError, TypeError)):
+        pair.client.flush()
+    # nothing delivered, nothing phantom-completed: both claims are back
+    # in pool order, both WRs still queued, no CQEs published
+    assert srq.taken_by_qp[pair.server.qp_num] == 0
+    assert [w.wr_id for w in srq._wrs] == [0, 1]
+    assert [ps.wr.wr_id for ps in pair.client.sq] == [0, 1]
+    assert pair.server_recv_cq.poll() == []
+    # the receiver corrects its posting: the stalled chain delivers
+    srq._wrs.popleft()                       # drop the malformed recv
+    srq.post_recv(verbs.RecvWR(wr_id=2))
+    assert pair.client.flush() == 2
+    assert [w.wr_id for w in pair.server_recv_cq.poll()] == [1, 2]
+    np.testing.assert_allclose(
+        np.asarray(pair.pd.engine.regions["land"]), 0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 10), st.integers(0, 3))
+def test_mr_landing_batched_matches_scalar_oracle(n, dup):
+    """Batched landings are bit-exact vs the element-at-a-time oracle
+    across run lengths and duplicate-offset patterns."""
+    def run(vectorized):
+        verbs.ProtectionDomain._next_key = 0x9000
+        pair = verbs.VerbsPair(depth=256, vectorized=vectorized)
+        mr = pair.pd.reg_mr("land", np.zeros((16, 4), np.float32))
+        rng = np.random.default_rng(n * 7 + dup)
+        for i in range(n):
+            off = int(rng.integers(0, 4)) if i < dup else 4 + i
+            pair.server.post_recv(
+                verbs.RecvWR(wr_id=i, mr=mr, offsets=[off]))
+        pair.client.post_send([verbs.SendWR(
+            wr_id=i, inline=False,
+            payload=rng.standard_normal((1, 4)).astype(np.float32),
+            signaled=False) for i in range(n)])
+        pair.client.flush()
+        wcs = pair.server_recv_cq.poll()
+        return ([(w.wr_id, w.status) for w in wcs],
+                np.asarray(pair.pd.engine.regions["land"]))
+
+    wcs_v, reg_v = run(True)
+    wcs_s, reg_s = run(False)
+    assert wcs_v == wcs_s
+    np.testing.assert_array_equal(reg_v, reg_s)
+
+
+# -- satellite: vectorized FLUSH_ERR teardown --------------------------------
+def test_flush_err_teardown_publishes_one_ring_dma_per_cq():
+    """destroy() with a stalled send queue + posted recvs: all FLUSH_ERR
+    CQEs for one CQ ride ONE encode + ONE ring produce."""
+    pd = verbs.ProtectionDomain()
+    t = verbs.LoopbackTransport()
+    send_cq = verbs.CompletionQueue(128, publish_every=64)
+    recv_cq = verbs.CompletionQueue(128, publish_every=64)
+    a = verbs.QueuePair(pd, send_cq, recv_cq)
+    b = verbs.QueuePair(pd, verbs.CompletionQueue(128))
+    verbs.connect(a, b, t)
+    for i in range(10):
+        a.post_recv(verbs.RecvWR(wr_id=100 + i))
+    a.post_send([verbs.SendWR(wr_id=i, payload=np.array([i], np.int64))
+                 for i in range(10)])        # peer has no recvs: stalls
+    ws0, wr0 = send_cq.ring.dma_writes, recv_cq.ring.dma_writes
+    a.destroy()
+    assert send_cq.ring.dma_writes - ws0 == 1
+    assert recv_cq.ring.dma_writes - wr0 == 1
+    assert [(w.wr_id, w.status) for w in send_cq.poll()] == \
+           [(i, verbs.IBV_WC_WR_FLUSH_ERR) for i in range(10)]
+    assert [(w.wr_id, w.status) for w in recv_cq.poll()] == \
+           [(100 + i, verbs.IBV_WC_WR_FLUSH_ERR) for i in range(10)]
+
+
+def test_flush_err_shared_cq_interleaves_send_then_recv():
+    """send and recv CQ being the SAME object: sq CQEs first, then rq —
+    one batch, original teardown order."""
+    pd = verbs.ProtectionDomain()
+    t = verbs.LoopbackTransport()
+    cq = verbs.CompletionQueue(64, publish_every=64)
+    a = verbs.QueuePair(pd, cq)                  # recv_cq defaults to cq
+    b = verbs.QueuePair(pd, verbs.CompletionQueue(64))
+    verbs.connect(a, b, t)
+    a.post_recv(verbs.RecvWR(wr_id=7))
+    a.post_send(verbs.SendWR(wr_id=3, payload=np.array([1], np.int64)))
+    w0 = cq.ring.dma_writes
+    a.modify(verbs.QPState.ERR)
+    assert cq.ring.dma_writes - w0 == 1
+    assert [(w.wr_id, w.opcode) for w in cq.poll()] == \
+           [(3, verbs.IBV_WR_SEND), (7, verbs.IBV_WC_RECV)]
+
+
+# -- satellite: connect() validates the transport up front -------------------
+def test_connect_rejects_qp_attached_to_other_transport():
+    pd = verbs.ProtectionDomain()
+    t1, t2 = verbs.LoopbackTransport(), verbs.LoopbackTransport()
+    a = verbs.QueuePair(pd, verbs.CompletionQueue(32))
+    b = verbs.QueuePair(pd, verbs.CompletionQueue(32))
+    t1.attach(a)
+    with pytest.raises(verbs.QPStateError):
+        verbs.connect(a, b, t2)          # a lives on t1: refused UP FRONT
+    assert a.state == verbs.QPState.RESET    # nothing transitioned
+    assert b.state == verbs.QPState.RESET
+    verbs.connect(a, b, t1)              # the matching transport is fine
+    assert a.state == verbs.QPState.RTS

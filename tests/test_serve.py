@@ -127,15 +127,52 @@ def test_kvtransfer_many_one_doorbell():
     eng = KVTransferEngine(model, 2, 8)
     one = eng.transfer(caches)                   # wr_id 1
     single_stats = eng.stats
-    d0 = eng.pair.client.doorbell_writes
+    d0 = eng.ep.qp.doorbell_writes
     outs = eng.transfer_many([caches, caches, caches])   # wr_id 2,3,4
-    assert eng.pair.client.doorbell_writes - d0 == 1
+    assert eng.ep.qp.doorbell_writes - d0 == 1
     assert eng._wr_id == 4
     assert eng.stats.payload_bytes == 3 * single_stats.payload_bytes
     assert len(outs) == 3
     for got in outs + [one]:
         jax.tree.map(lambda a, b: np.testing.assert_allclose(
             np.asarray(a), np.asarray(b)), got, caches)
+
+
+def test_cross_engine_shared_fabric_pool():
+    """ISSUE 5: serve engine + kvtransfer as tenants of ONE fabric —
+    one recv pool, one srq_limit watermark, both run through
+    fabric.connect() and both make progress concurrently."""
+    from repro import verbs
+    from repro.core.kvtransfer import KVTransferEngine
+    cfg, model, params = _model()
+    fabric = verbs.Fabric()
+    eng = ServeEngine(model, params, max_batch=2, max_seq=48,
+                      fabric=fabric)
+    # single-pod shared fabric: kv transfers move by reference and the
+    # engine says so up front
+    with pytest.warns(UserWarning, match="single-pod fabric"):
+        kv = KVTransferEngine(model, 2, 8, fabric=fabric)
+    assert kv.srq is eng.srq is fabric.srq       # ONE fabric-scope pool
+    assert kv.fabric is eng.fabric
+    # interleave the tenants: transfer mid-serving, then finish serving
+    rids = [eng.submit([5, 3, 9], max_new_tokens=4)]
+    eng.step()
+    _, caches = jax.jit(model.prefill)(params, jnp.ones((2, 8), jnp.int32))
+    got = kv.transfer(caches)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), got, caches)
+    results = eng.run_until_done()
+    assert len(results[rids[0]]) == 4
+    # both tenants drew from the shared pool (per-QP takes recorded)
+    takes = fabric.srq.taken_by_qp
+    assert takes[eng.ep.peer.qp.qp_num] >= 1
+    assert takes[kv.ep.peer.qp.qp_num] >= 1
+    # tenants leaving a LONG-LIVED fabric release everything they held:
+    # listeners, QPs, routes, and the serve engine's refill doorbell
+    kv.close()
+    eng.close()
+    assert not fabric.qps and not fabric.routes and not fabric._listeners
+    assert not fabric.srq._limit_cbs
 
 
 def test_pd_quantized_transfer_close():
