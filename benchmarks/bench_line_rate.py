@@ -17,15 +17,17 @@ import time
 
 import numpy as np
 
+from benchmarks.common import TimingStats
 from repro import verbs
 
 CHAINS = (1, 64, 4096)
 N_CLIENTS = 4              # SRQ fan-in width
 
 
-def _median_time(fn, n: int) -> float:
-    """Median wall us of fn() (one warmup for jit/op caches; fewer iters
-    for the big scalar chains, which run seconds each)."""
+def _median_time(fn, n: int) -> TimingStats:
+    """Wall us of fn() as TimingStats — reads as the median, carries
+    {p50, p95, max} (one warmup for jit/op caches; fewer iters for the
+    big scalar chains, which run seconds each)."""
     fn()
     iters = 5 if n <= 64 else 3
     ts = []
@@ -33,8 +35,7 @@ def _median_time(fn, n: int) -> float:
         t0 = time.perf_counter_ns()
         fn()
         ts.append((time.perf_counter_ns() - t0) / 1e3)
-    ts.sort()
-    return ts[len(ts) // 2]
+    return TimingStats(ts)
 
 
 # WR lists are built ONCE per setup and re-posted each iteration: WRs are
@@ -144,6 +145,8 @@ def run():
             if fam == "write":
                 derived += (f";launches_per_wr={res['vec_lpw']:.6f};"
                             f"scalar_launches_per_wr={res['scalar_lpw']:.3f}")
-            rows.append((f"line_rate_{fam}_{n}wr", res["vec"] / total,
+            rows.append((f"line_rate_{fam}_{n}wr",
+                         TimingStats([t / total
+                                      for t in res["vec"].samples]),
                          derived))
     return rows

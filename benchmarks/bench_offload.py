@@ -66,7 +66,7 @@ def run():
     for n in (8, 64, 256):
         offs = np.random.default_rng(n).integers(0, 4096, n).astype(np.int32)
         us_b = time_call(lambda: eng.handle_packet(OP_BATCH_READ, offs),
-                         iters=5)
+                         iters=5, label=f"batchread_n{n}")
 
         def per_read():
             return [np.asarray(single(int(o))) for o in offs]

@@ -85,8 +85,10 @@ def run():
         pair.client.flush()
         return pair.server_recv_cq.poll()
 
-    us_in = time_call(lambda: send_one(small, True), warmup=3, iters=9)
-    us_out = time_call(lambda: send_one(big, False), warmup=3, iters=9)
+    us_in = time_call(lambda: send_one(small, True), warmup=3, iters=9,
+                      label="send_inline_64B")
+    us_out = time_call(lambda: send_one(big, False), warmup=3, iters=9,
+                       label="send_noninline_16KB")
     rows.append(("verbs_send_inline_64B", us_in,
                  f"wqe_cachelines=2;ratio_vs_noninline={us_in/us_out:.2f}"))
     rows.append(("verbs_send_noninline_16KB", us_out, "payload_path=1"))

@@ -11,6 +11,15 @@ bar. Wall-clock throughput (wrs_per_s) swings ±20% run-to-run on this
 rig with UNCHANGED code (container scheduling noise), so it warns at
 20% and hard-fails only past 50% — loud on a real datapath collapse,
 quiet on rig weather.
+
+On top of the hand-picked per-row headline metrics, the gate reads the
+``"metrics"`` block the registry embeds in every BENCH JSON (see
+repro.obs) and compares its COUNTERS bucket generically: any counter
+the datapath pushed >20% (+a small absolute slack for near-zero
+counts) above the committed baseline fails. Forward-compatible by
+construction: a counter the baseline does not know yet — new
+instrumentation landing before baselines are refreshed — only WARNS,
+as does a counter that vanished from the fresh run.
 """
 from __future__ import annotations
 
@@ -34,12 +43,59 @@ HEADLINES = {
 WALL_METRICS = {"wrs_per_s"}
 TOLERANCE = 0.20            # counters: deterministic, hard bar
 WALL_TOLERANCE = 0.50       # wall clock: warn past 20%, fail past 50%
+COUNTER_SLACK = 2           # absolute slack for near-zero registry counts
+
+
+def _payload(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
 
 
 def _rows(path: str) -> dict:
-    with open(path) as f:
-        payload = json.load(f)
-    return {row["name"]: row.get("derived", {}) for row in payload["rows"]}
+    return {row["name"]: row.get("derived", {})
+            for row in _payload(path)["rows"]}
+
+
+def _registry_counters(path: str) -> dict:
+    """The registry's instance-collapsed counter bucket of a BENCH JSON
+    ({} for pre-telemetry baselines — nothing to gate, nothing fails)."""
+    return _payload(path).get("metrics", {}).get("counters", {})
+
+
+def check_metrics(name: str, base_path: str, fresh_path: str) -> list[str]:
+    """Generic registry-counter gate for one benchmark. Counters are
+    deterministic event counts, so MORE events than baseline (past
+    TOLERANCE, plus COUNTER_SLACK for tiny counts) is a regression —
+    more DMAs, more doorbells, more retries for the same workload.
+    Fewer is an improvement, never a failure. A counter only one side
+    knows about WARNS instead of failing: a fresh run emitting a metric
+    the committed baseline predates must not break the gate (and a
+    vanished counter is flagged for a baseline refresh, not punished)."""
+    failures: list[str] = []
+    base_c = _registry_counters(base_path)
+    fresh_c = _registry_counters(fresh_path)
+    for key in sorted(fresh_c):
+        fv = fresh_c[key]
+        bv = base_c.get(key)
+        if bv is None:
+            if base_c:          # a block-less baseline gets ONE summary
+                print(f"  [new] {name} counter {key}={fv} "
+                      "not in baseline (warn only — refresh baselines)")
+            continue
+        bad = fv > bv * (1.0 + TOLERANCE) + COUNTER_SLACK
+        mark = "REG" if bad else "ok "
+        print(f"  [{mark}] {name} counter {key}: base={bv} fresh={fv}")
+        if bad:
+            failures.append(
+                f"{name} counter {key}: {bv} -> {fv} "
+                f"(>{TOLERANCE:.0%}+{COUNTER_SLACK} regression)")
+    for key in sorted(set(base_c) - set(fresh_c)):
+        print(f"  [gone] {name} counter {key} missing from fresh run "
+              "(warn only)")
+    if not base_c and fresh_c:
+        print(f"  [new] {name}: baseline has no metrics block; "
+              f"{len(fresh_c)} fresh counters unchecked (warn only)")
+    return failures
 
 
 def _regression(direction: str, base: float, fresh: float,
@@ -84,6 +140,7 @@ def check(repo_root: str, fresh_dir: str, names) -> list[str]:
                     failures.append(
                         f"{name}/{row} {metric}: {b} -> {f} "
                         f"(>{tol:.0%} regression)")
+        failures.extend(check_metrics(name, base_path, fresh_path))
     return failures
 
 

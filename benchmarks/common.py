@@ -11,9 +11,32 @@ import time
 
 import jax
 
+from repro.obs import metrics
 
-def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (us) of fn(*args) with block_until_ready."""
+
+class TimingStats(float):
+    """`time_call`'s return: the float value IS the median (p50), so
+    every existing scalar consumer — arithmetic, f-strings, CSV rows —
+    keeps working verbatim, while `.p50`/`.p95`/`.max` (and the raw
+    `.samples`) carry the tail for the BENCH JSONs."""
+
+    def __new__(cls, samples):
+        s = sorted(float(v) for v in samples)
+        self = float.__new__(cls, s[len(s) // 2])
+        self.samples = s
+        self.p50 = float(self)
+        self.p95 = s[min(len(s) - 1, round(0.95 * (len(s) - 1)))]
+        self.max = s[-1]
+        return self
+
+
+def time_call(fn, *args, warmup: int = 2, iters: int = 5,
+              label: str | None = None) -> TimingStats:
+    """Wall time (us) of fn(*args) with block_until_ready: a
+    `TimingStats` — reads as the median like the old float return, with
+    {p50, p95, max} attached. With `label`, the samples also feed the
+    registry Histogram ``bench/<label>`` so the tail lands in the
+    BENCH_*.json "metrics" block."""
     for _ in range(warmup):
         r = fn(*args)
         jax.block_until_ready(r)
@@ -23,8 +46,11 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         r = fn(*args)
         jax.block_until_ready(r)
         times.append((time.perf_counter_ns() - t0) / 1e3)
-    times.sort()
-    return times[len(times) // 2]
+    stats = TimingStats(times)
+    if label is not None:
+        metrics.get_registry().scope("bench").histogram(label) \
+            .observe_many(stats.samples)
+    return stats
 
 
 def run_sharded_probe(body: str, timeout: int = 600) -> str:

@@ -45,15 +45,31 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def _write_json(json_dir: str, modname: str, rows) -> str:
+def _write_json(json_dir: str, modname: str, rows, registry) -> str:
     short = modname.rsplit(".", 1)[-1].removeprefix("bench_")
     path = os.path.join(json_dir, f"BENCH_{short}.json")
+    out_rows = []
+    bench_scope = registry.scope("bench")
+    for name, us, derived in rows:
+        row = {"name": name, "us_per_call": round(float(us), 3),
+               "derived": _parse_derived(derived),
+               "derived_raw": str(derived)}
+        if hasattr(us, "p95"):
+            # TimingStats: tail latency rides the row AND the registry
+            # (as a per-row histogram, unless a time_call label already
+            # recorded these samples under this name)
+            row["us_p95"] = round(float(us.p95), 3)
+            row["us_max"] = round(float(us.max), 3)
+            if name not in bench_scope.metrics and \
+                    hasattr(us, "samples"):
+                bench_scope.histogram(name).observe_many(us.samples)
+        out_rows.append(row)
     payload = {
         "benchmark": short,
-        "rows": [{"name": name, "us_per_call": round(float(us), 3),
-                  "derived": _parse_derived(derived),
-                  "derived_raw": str(derived)}
-                 for name, us, derived in rows],
+        "rows": out_rows,
+        # instance-collapsed registry snapshot of THIS module's run:
+        # every counter the datapath touched, benchmark-agnostic
+        "metrics": registry.aggregate(),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
@@ -71,19 +87,25 @@ def main() -> None:
     args = p.parse_args()
 
     import importlib
+
+    from repro.obs import metrics
+
     print("name,us_per_call,derived")
     failed = []
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
         try:
+            # one empty registry per module: the JSON "metrics" block
+            # covers exactly this module's run, nothing carried over
+            registry = metrics.fresh_registry()
             mod = importlib.import_module(modname)
             rows = list(mod.run())
             for name, us, derived in rows:
                 print(f"{name},{us:.2f},{derived}")
             sys.stdout.flush()
             if args.json_dir:
-                path = _write_json(args.json_dir, modname, rows)
+                path = _write_json(args.json_dir, modname, rows, registry)
                 print(f"# wrote {path}")
         except Exception:
             traceback.print_exc()

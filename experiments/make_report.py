@@ -71,6 +71,40 @@ def roofline_table(recs, opt=None):
     return "\n".join(rows)
 
 
+def bench_metrics_tables(repo_root):
+    """Render the registry metrics embedded in the committed
+    BENCH_*.json baselines (repro.obs): one headline-row table plus the
+    per-benchmark counter/histogram trajectory. This is the per-PR view
+    of the telemetry layer — refreshing baselines updates the report."""
+    paths = sorted(glob.glob(os.path.join(repo_root, "BENCH_*.json")))
+    if not paths:
+        return "(no committed BENCH_*.json baselines)"
+    out = ["| benchmark | rows | counters tracked | headline counters |",
+           "|---|---|---|---|"]
+    details = []
+    for path in paths:
+        r = json.load(open(path))
+        name = r.get("benchmark", os.path.basename(path))
+        counters = r.get("metrics", {}).get("counters", {})
+        hists = r.get("metrics", {}).get("histograms", {})
+        head = sorted(counters.items(),
+                      key=lambda kv: -abs(kv[1]))[:3]
+        head_s = "; ".join(f"`{k}`={v}" for k, v in head) or "—"
+        out.append(f"| {name} | {len(r.get('rows', []))} | "
+                   f"{len(counters)} | {head_s} |")
+        if counters or hists:
+            rows = [f"\n### {name}\n",
+                    "| metric | kind | value |", "|---|---|---|"]
+            for k, v in sorted(counters.items()):
+                rows.append(f"| `{k}` | counter | {v} |")
+            for k, v in sorted(hists.items()):
+                rows.append(f"| `{k}` | histogram | count={v['count']} "
+                            f"p50={v['p50']:.1f} p95={v['p95']:.1f} "
+                            f"max={v['max']:.1f} |")
+            details.append("\n".join(rows))
+    return "\n".join(out) + "\n" + "\n".join(details)
+
+
 def main():
     base = load("baseline")
     opt = load("optimized")
@@ -84,6 +118,9 @@ def main():
     print(roofline_table(opt))
     print("\n## E. Dry-run records — optimized, multi-pod\n")
     print(dryrun_table(opt, "multi"))
+    print("\n## F. Verbs-stack telemetry trajectory (registry metrics "
+          "from committed BENCH baselines)\n")
+    print(bench_metrics_tables(os.path.dirname(ROOT)))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Static check: no bare ad-hoc counters in the verbs stack.
+
+ISSUE 6 moved every datapath counter (`doorbell_writes`,
+`desc_fetch_dmas`, RNR stats, CQ credit, ...) onto the repro.obs
+registry via `counter_attr` / `gauge_attr` class-level views. This lint
+keeps it that way: a NEW ``self.<public_name> += 1``-style counter under
+``src/repro/verbs/`` whose name is not declared as a registry attribute
+view anywhere in the tree is a failure — telemetry must not silently
+fragment back into attributes only one benchmark knows about.
+
+Mechanics: AST-walk every module under --root. Class bodies contribute
+DECLARED names (``name = metrics.counter_attr()`` / ``gauge_attr()``,
+unioned across all classes — subclasses augment attributes their base
+declared, and the walker does not resolve inheritance). Function bodies
+contribute USED names (AugAssign on ``self.<name>`` with a public
+name). USED - DECLARED = violations. Private (``_``-prefixed)
+attributes are exempt: loop indices and internal sequence numbers are
+implementation state, not telemetry.
+
+    python scripts/lint_counters.py [--root src/repro/verbs]
+
+Exit 0 clean, 1 with a violation listing otherwise (wired into
+scripts/tier1.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+ATTR_FACTORIES = {"counter_attr", "gauge_attr"}
+
+
+def _is_attr_view(node: ast.AST) -> bool:
+    """True for ``metrics.counter_attr()`` / ``counter_attr()`` calls."""
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr in ATTR_FACTORIES
+    return isinstance(fn, ast.Name) and fn.id in ATTR_FACTORIES
+
+
+def scan_module(path: str):
+    """Returns (declared, used) for one file: registry-view names
+    declared at class level, and (name, lineno) pairs of public
+    ``self.<name> op= ...`` statements."""
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    declared: set[str] = set()
+    used: list[tuple[str, int]] = []
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        for stmt in cls.body:
+            if isinstance(stmt, ast.Assign) and _is_attr_view(stmt.value):
+                declared.update(t.id for t in stmt.targets
+                                if isinstance(t, ast.Name))
+            elif isinstance(stmt, ast.AnnAssign) and \
+                    stmt.value is not None and _is_attr_view(stmt.value) \
+                    and isinstance(stmt.target, ast.Name):
+                declared.add(stmt.target.id)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.AugAssign):
+            continue
+        t = node.target
+        if isinstance(t, ast.Attribute) and \
+                isinstance(t.value, ast.Name) and t.value.id == "self" \
+                and not t.attr.startswith("_"):
+            used.append((t.attr, node.lineno))
+    return declared, used
+
+
+def lint(root: str) -> list[str]:
+    declared: set[str] = set()
+    per_file: dict[str, list[tuple[str, int]]] = {}
+    for dirpath, _, files in sorted(os.walk(root)):
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            d, u = scan_module(path)
+            declared |= d
+            per_file[path] = u
+    violations = []
+    for path, uses in per_file.items():
+        for name, line in uses:
+            if name not in declared:
+                violations.append(
+                    f"{path}:{line}: bare counter `self.{name} += ...` — "
+                    f"declare `{name} = metrics.counter_attr()` (or "
+                    "gauge_attr) at class level so it lives in the "
+                    "repro.obs registry")
+    return violations
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "src", "repro", "verbs"))
+    args = p.parse_args()
+    if not os.path.isdir(args.root):
+        print(f"lint_counters: no such directory {args.root}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    violations = lint(args.root)
+    if violations:
+        print("lint_counters: ad-hoc counters outside the registry:")
+        for v in violations:
+            print(f"  {v}")
+        raise SystemExit(1)
+    print(f"lint_counters: clean ({args.root})")
+
+
+if __name__ == "__main__":
+    main()

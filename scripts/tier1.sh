@@ -13,6 +13,8 @@ if ! python -c "import repro" 2>/dev/null; then
     echo "  - or check 'python' resolves to the project interpreter: $(command -v python)" >&2
     exit 2
 fi
+# telemetry lint: new verbs counters must live in the repro.obs registry
+python scripts/lint_counters.py
 if [[ "${1:-}" == "--smoke" ]]; then
     exec python -m pytest -x -q -m "not slow" "${@:2}"
 fi

@@ -25,6 +25,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.descriptors import DESCRIPTOR_WIDTH
+from repro.obs import metrics
 
 
 class RingFullError(RuntimeError):
@@ -32,9 +33,21 @@ class RingFullError(RuntimeError):
 
 
 class Ring:
+    # registry-backed (repro.obs): each Ring instance still owns
+    # independent values (the vectorized-vs-scalar bit-exactness tests
+    # compare them across instances), but they are addressable as
+    # `ring{i}/dma_writes` — or `cq{j}/ring{i}/...` when the owning CQ
+    # passes itself as metrics_parent
+    dma_writes = metrics.counter_attr()
+    dma_reads = metrics.counter_attr()
+    max_occupancy = metrics.gauge_attr()
+
     def __init__(self, capacity: int, width: int = DESCRIPTOR_WIDTH,
-                 publish_every: int = 8, vectorized: bool = True):
+                 publish_every: int = 8, vectorized: bool = True,
+                 metrics_parent=None):
         assert capacity > 0
+        metrics.instance_scope(self, "ring", indexed=True,
+                               parent=metrics_parent)
         self.capacity = capacity
         self.width = width
         self.vectorized = vectorized

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.descriptors import TransferPlan
 from repro.models import module as mod
+from repro.obs import metrics
 from repro.parallel import sharding
 
 
@@ -62,6 +63,8 @@ def _permute_leaf(x, spec: P, axis: str, shift: int):
 
 def transmit(tree, spec_tree, plan: TransferPlan):
     """FlexiNS path: stripe + direct ppermute (+ optional int8 wire)."""
+    # resolved at call time so per-bench-module registry swaps see it
+    metrics.get_registry().scope("tx_engine").counter("transmits").inc()
     ctx = sharding.current()
     if ctx is None or plan.axis not in ctx.mesh.axis_names:
         return tree     # single-device / no pod axis: transfer is identity
@@ -85,6 +88,8 @@ def transmit(tree, spec_tree, plan: TransferPlan):
 def transmit_staged(tree, spec_tree, plan: TransferPlan):
     """Naive baseline: payload staged through a replicated buffer before
     the wire (the 'through Arm memory' path, paper Fig. 6a)."""
+    metrics.get_registry().scope("tx_engine") \
+        .counter("staged_transmits").inc()
     ctx = sharding.current()
     if ctx is None or plan.axis not in ctx.mesh.axis_names:
         return tree

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro import verbs
 from repro.core.descriptors import make_descriptor, OP_KV_WRITE
+from repro.obs import metrics
 from repro.serve.kvcache import pad_caches
 
 
@@ -34,9 +35,25 @@ class Request:
 
 
 class ServeEngine:
+    # per-tenant telemetry (`serve{i}/...` in the registry): requests
+    # posted through the verbs client side, and pool refills the SRQ
+    # watermark doorbell triggered
+    requests_submitted = metrics.counter_attr()
+    srq_refills = metrics.counter_attr()
+
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_seq: int = 256, ring_capacity: int = 64,
                  vectorized: bool = True, fabric=None):
+        metrics.instance_scope(self, "serve", indexed=True)
+        self.requests_submitted = 0
+        self.srq_refills = 0
+        # levels are owned by engine state — sample, don't mirror
+        metrics.weak_probe(self._metrics, "slots_active", self,
+                           lambda e: sum(1 for s in e.slots
+                                         if s is not None))
+        metrics.weak_probe(self._metrics, "requests_pending", self,
+                           lambda e: sum(1 for r in e.requests.values()
+                                         if not r.done))
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -89,6 +106,7 @@ class ServeEngine:
     def submit(self, prompt: list, max_new_tokens: int = 16) -> int:
         rid = self._next_id
         self._next_id += 1
+        self.requests_submitted += 1
         self.pinned_prompts[rid] = np.asarray(prompt, np.int32)
         self.requests[rid] = Request(rid, list(prompt), max_new_tokens)
         self._post_descriptor(make_descriptor(OP_KV_WRITE, src=rid,
@@ -101,6 +119,7 @@ class ServeEngine:
         want = self.max_batch * 2
         if len(srq) < want:
             srq.post_recv([verbs.RecvWR() for _ in range(want - len(srq))])
+            self.srq_refills += 1
         srq.arm(self.max_batch)
 
     def _post_descriptor(self, descs):

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.descriptors import DESCRIPTOR_WIDTH, W_SEQ
 from repro.core.notification import Ring
+from repro.obs import metrics, trace
 from repro.verbs import wqe
 
 
@@ -44,11 +45,16 @@ class WorkCompletion:
 
 
 class CompletionQueue:
+    # registry-backed credit level: `cq{i}/fc_reserved` in snapshots
+    fc_reserved = metrics.gauge_attr()
+
     def __init__(self, depth: int = 256, publish_every: int = 8,
                  vectorized: bool = True):
+        metrics.instance_scope(self, "cq", indexed=True)
         self.vectorized = vectorized
         self.ring = Ring(depth, publish_every=publish_every,
-                         vectorized=vectorized)
+                         vectorized=vectorized,
+                         metrics_parent=self._metrics)
         # staged CQEs live as ONE (n, width) block: staging a batch is an
         # array concat and publishing a chunk is a slice, never a python
         # loop over rows
@@ -171,12 +177,17 @@ class CompletionQueue:
         consumer-counter publish per poll (the CQ consumer-index
         doorbell): this is what hands the freed slots back as credit —
         both to the ring producer and to flow-controlled senders."""
+        tr = trace.TRACER
+        t0 = tr.now() if tr is not None else 0
         out = self._drain(max_n)
         if out or len(self._pending):
             self.ring.force_publish()
         if len(self._pending) and (max_n is None or len(out) < max_n):
             self.flush()                # backlog publishes into freed slots
             out += self._drain(None if max_n is None else max_n - len(out))
+        if tr is not None and out:
+            tr.complete("poll_cq", t0, cq=self._metrics.name,
+                        cqes=len(out))
         return out
 
     def _drain(self, max_n: int | None) -> list[WorkCompletion]:

@@ -39,9 +39,11 @@ firing (exponential backoff accumulates in ``rnr_backoff_units``, and
 ``on_rnr_backoff`` is the timeout hook — refill the peer there to model
 a receiver catching up) and re-dispatches; a WR still stalled past the
 budget retires with an ``IBV_WC_RNR_ERR`` completion — surfaced through
-``poll_cq`` like any other status, with ``rnr_retries`` /
-``rnr_exhausted`` counters on both the fabric and the QP for the
-benches.
+``poll_cq`` like any other status. RNR accounting is single-source: the
+QP owns its ``rnr_retries`` / ``rnr_exhausted`` / ``rnr_backoff_units``
+registry counters (``fabric{k}/qp{n}/...`` once attached), and the
+fabric's same-named attributes are read-only sums over every QP it ever
+attached — two views of ONE counter, never double-booked.
 """
 from __future__ import annotations
 
@@ -50,6 +52,7 @@ from typing import Any, Callable
 
 from repro.core.descriptors import TransferPlan
 from repro.launch.mesh import make_fabric_mesh
+from repro.obs import metrics
 from repro.verbs import wqe
 from repro.verbs.cq import CompletionQueue, CQOverrunError
 from repro.verbs.pd import ProtectionDomain
@@ -313,13 +316,41 @@ class Fabric(MeshTransport):
         self._srq: SharedReceiveQueue | None = None
         self.srq_max_wr = srq_max_wr
         self.srq_limit = srq_limit
-        # RNR policy + counters
+        # RNR policy. The counters live on the QPs (single-source):
+        # `_rnr_sources` captures each attached QP's registry Counter
+        # objects by qp_num, so the fabric's summed views below survive
+        # a qp.destroy() — a torn-down connection's retries stay counted.
         self.rnr_retry = rnr_retry
         self.rnr_timeout = rnr_timeout
         self.on_rnr_backoff = on_rnr_backoff
-        self.rnr_retries = 0
-        self.rnr_exhausted = 0
-        self.rnr_backoff_units = 0
+        self._rnr_sources: dict[int, tuple] = {}
+
+    # -- telemetry -----------------------------------------------------------
+    def attach(self, qp: QueuePair) -> QueuePair:
+        """MeshTransport.attach + telemetry adoption: the QP's metric
+        scope re-homes under this fabric (``fabric{k}/qp{n}/...``) and
+        its RNR counters are captured for the fabric's summed views."""
+        super().attach(qp)
+        sc = metrics.scope_of(qp)
+        sc.reparent(metrics.scope_of(self))
+        self._rnr_sources[qp.qp_num] = tuple(
+            sc.counter(leaf) for leaf in
+            ("rnr_retries", "rnr_exhausted", "rnr_backoff_units"))
+        return qp
+
+    # One registry counter, two views (the RNR dedup): these sums read
+    # the SAME Counter objects `qp.rnr_retries += 1` writes.
+    @property
+    def rnr_retries(self) -> int:
+        return sum(t[0].value for t in self._rnr_sources.values())
+
+    @property
+    def rnr_exhausted(self) -> int:
+        return sum(t[1].value for t in self._rnr_sources.values())
+
+    @property
+    def rnr_backoff_units(self) -> int:
+        return sum(t[2].value for t in self._rnr_sources.values())
 
     @property
     def mesh(self):
@@ -512,10 +543,9 @@ class Fabric(MeshTransport):
             if head.rnr_tries < self.rnr_retry:
                 publish_errs()      # keep CQE order ahead of a re-dispatch
                 head.rnr_tries += 1
-                self.rnr_retries += 1
-                qp.rnr_retries += 1
+                qp.rnr_retries += 1     # fabric.rnr_retries sums this
                 # exponential timeout backoff, in rnr_timeout units
-                self.rnr_backoff_units += \
+                qp.rnr_backoff_units += \
                     self.rnr_timeout << (head.rnr_tries - 1)
                 if self.on_rnr_backoff is not None:
                     # the timeout hook: tests/benches refill the peer
@@ -526,8 +556,7 @@ class Fabric(MeshTransport):
             # retry budget exhausted: complete the WR with RNR_ERR
             qp.sq.popleft()
             qp._fc_retire(head)
-            self.rnr_exhausted += 1
-            qp.rnr_exhausted += 1
+            qp.rnr_exhausted += 1   # fabric.rnr_exhausted sums this
             err_ops.append(head.wr.opcode)
             err_ids.append(head.wr.wr_id)
             extra += 1

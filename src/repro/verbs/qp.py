@@ -20,6 +20,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.offload_engine import QPContext
+from repro.obs import metrics, trace
 from repro.verbs import wqe
 from repro.verbs.cq import CQOverrunError
 from repro.verbs.pd import MemoryRegion, ProtectionDomain
@@ -123,6 +124,15 @@ class _PostedSend:
 class QueuePair:
     _next_qp_num = 1
 
+    # registry-backed telemetry (repro.obs): `self.x += 1` call sites and
+    # benchmark reads are unchanged, but the values live under this QP's
+    # scope (`qp{n}/...`, re-homed to `fabric{k}/qp{n}/...` on attach)
+    doorbell_writes = metrics.counter_attr()
+    desc_fetch_dmas = metrics.counter_attr()
+    rnr_retries = metrics.counter_attr()
+    rnr_exhausted = metrics.counter_attr()
+    rnr_backoff_units = metrics.counter_attr()
+
     def __init__(self, pd: ProtectionDomain, send_cq, recv_cq=None, *,
                  max_send_wr: int = 256, max_recv_wr: int = 256,
                  srq=None, flow_control: bool = False,
@@ -137,6 +147,9 @@ class QueuePair:
         self.max_recv_wr = max_recv_wr
         self.qp_num = QueuePair._next_qp_num
         QueuePair._next_qp_num += 1
+        # registry scope FIRST: every metric-backed attribute below
+        # resolves through it (qp_num is naturally unique -> no index)
+        metrics.instance_scope(self, f"qp{self.qp_num}")
         self.state = QPState.RESET
         self.dest_qp_num: int | None = None
         self.sq: deque[_PostedSend] = deque()
@@ -154,14 +167,22 @@ class QueuePair:
         self.doorbell_writes = 0
         self.desc_fetch_dmas = 0
         # RNR accounting (fabric transports): timeout-backoff retries
-        # consumed and WRs retired IBV_WC_RNR_ERR after retry exhaustion
+        # consumed, backoff units slept, and WRs retired IBV_WC_RNR_ERR
+        # after retry exhaustion. These are THE counters — the Fabric's
+        # same-named attributes are read-only sums over its QPs.
         self.rnr_retries = 0
         self.rnr_exhausted = 0
+        self.rnr_backoff_units = 0
         # the T4 context every one-sided op against this QP coalesces in
         # (bound into the engine so handle_packet dispatches into it too)
         self.ctx = pd.engine.bind_context(
             self.qp_num, QPContext(self.qp_num, pd.engine,
                                    coalesce_writes=vectorized))
+        # QPContext is a plain dataclass: surface its DMA-launch count as
+        # a sampled probe (weak — the registry must not pin a torn-down
+        # context's buffers)
+        metrics.weak_probe(self._metrics, "dma_launches", self.ctx,
+                           lambda c: c.dma_launches, kind="counter")
 
     # -- state machine ------------------------------------------------------
     def modify(self, state: QPState, *, dest_qp_num: int | None = None):
@@ -234,6 +255,9 @@ class QueuePair:
         if self.transport is not None:
             self.transport.qps.pop(self.qp_num, None)
             self.transport = None
+        probe = self._metrics.metrics.get("dma_launches")
+        if probe is not None:
+            probe.read()        # freeze the final count before teardown
         self.pd.engine.unbind_context(self.qp_num)
         self.state = QPState.ERR
         return self
@@ -258,6 +282,8 @@ class QueuePair:
         chain = wr if isinstance(wr, list) else [wr]
         if not chain:
             return self
+        tr = trace.TRACER
+        t0 = tr.now() if tr is not None else 0
         if self.state != QPState.RTS:
             raise QPStateError(f"post_send in {self.state.name} "
                                "(need RTS)")
@@ -272,6 +298,9 @@ class QueuePair:
         self.sq.extend(posted)
         self.doorbell_writes += 1
         self.desc_fetch_dmas += 1       # whole chain rides one fetch DMA
+        if tr is not None:
+            tr.complete("post_send", t0, qp=self.qp_num, wrs=len(chain))
+            tr.instant("doorbell", qp=self.qp_num, wrs=len(chain))
         return self
 
     # -- flow control --------------------------------------------------------

@@ -23,12 +23,21 @@ from __future__ import annotations
 from collections import deque
 from typing import Callable
 
+from repro.obs import metrics
 from repro.verbs.qp import QPStateError, RecvWR
 
 
 class SharedReceiveQueue:
+    # watermark events fired, as `srq{i}/limit_events` in the registry
+    limit_events = metrics.counter_attr()
+
     def __init__(self, max_wr: int = 512, *, srq_limit: int = 0,
                  on_limit: Callable[["SharedReceiveQueue"], None] | None = None):
+        metrics.instance_scope(self, "srq", indexed=True)
+        # pool depth is owned by the deque — sample it, don't mirror it
+        # (weakly: the registry must not keep a dead pool's WRs alive)
+        metrics.weak_probe(self._metrics, "pool_depth", self,
+                           lambda s: len(s._wrs))
         self.max_wr = max_wr
         self.srq_limit = srq_limit
         # limit-event listeners: a fabric-scope pool serves several

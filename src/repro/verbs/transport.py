@@ -35,10 +35,20 @@ import numpy as np
 from repro.core import tx_engine
 from repro.core.descriptors import TransferPlan
 from repro.core.offload_engine import dedupe_last_wins
+from repro.obs import metrics, trace
 from repro.verbs import wqe
 from repro.verbs.cq import CompletionQueue
 from repro.verbs.pd import MemoryRegion, ProtectionDomain
 from repro.verbs.qp import QPState, QPStateError, QueuePair, RecvWR, SendWR
+
+
+# opcode labels for trace spans (perfetto track names read as verbs)
+_OP_NAMES = {wqe.IBV_WR_SEND: "SEND", wqe.IBV_WR_RDMA_WRITE: "RDMA_WRITE",
+             wqe.IBV_WR_RDMA_READ: "RDMA_READ"}
+
+
+def _op_name(op: int) -> str:
+    return _OP_NAMES.get(op, f"CUSTOM_{op:#x}")
 
 
 @dataclass(slots=True)
@@ -194,11 +204,17 @@ class LoopbackTransport:
                 ctx._flush()
             # publish: one batched ring DMA per CQ, not per CQE — and in
             # vectorized mode one descriptor-block encode per CQ too
+            tr = trace.TRACER
             if vec:
                 for st in stages.values():
+                    t0 = tr.now() if tr is not None else 0
                     st.cq.push_batch(wqe.encode_cqe_batch(
                         st.ops, st.ids, st.sts, st.lens), st.datas)
                     st.cq.flush()
+                    if tr is not None:
+                        tr.complete("cqe_publish", t0,
+                                    cq=st.cq._metrics.name,
+                                    cqes=len(st.ids))
                 return
             groups: dict[int, list[_Cqe]] = {}
             for c in cqes:
@@ -208,10 +224,14 @@ class LoopbackTransport:
                 # oracle: per-element descriptor encode (the old per-CQE
                 # cost), staged once like the old stacked produce — NOT
                 # a per-CQE ring write
+                t0 = tr.now() if tr is not None else 0
                 cq.push_batch(np.stack([
                     wqe.encode_cqe(c.opcode, c.wr_id, c.status, c.length)
                     for c in items]), [c.data for c in items])
                 cq.flush()
+                if tr is not None:
+                    tr.complete("cqe_publish", t0, cq=cq._metrics.name,
+                                cqes=len(items))
 
         processed = 0
         try:
@@ -243,6 +263,12 @@ class LoopbackTransport:
                     if ps.wr.opcode != op:
                         break
                     run.append(ps)
+            # fusion-annotated span per run (one TRACER check per RUN,
+            # never per WR): run length, WRs handled, and how many DMAs
+            # the run stacked onto the peer's T4 context
+            tr = trace.TRACER
+            t0 = tr.now() if tr is not None else 0
+            dmas0 = len(peer.ctx._dma_queue) if tr is not None else 0
             if wqe.is_custom(op):
                 handled = self._run_custom(qp, peer, run[0], stage)
             elif op == wqe.IBV_WR_SEND:
@@ -253,6 +279,10 @@ class LoopbackTransport:
                 handled = self._run_reads(qp, peer, run, stage, reads)
             else:
                 raise ValueError(f"unknown opcode {op:#x}")
+            if tr is not None:
+                tr.complete(f"dispatch_run:{_op_name(op)}", t0,
+                            qp=qp.qp_num, run=len(run), handled=handled,
+                            stacked_dmas=len(peer.ctx._dma_queue) - dmas0)
             for _ in range(handled):
                 qp._fc_retire(sq.popleft())  # reservation -> CQ occupancy
             processed += handled
@@ -601,6 +631,11 @@ class LoopbackTransport:
 class MeshTransport(LoopbackTransport):
     """Lower payload-bearing SENDs onto the T1 TX engine: headers on the
     ring, payload once over the fattest direct path (striped ppermute)."""
+
+    # registry-backed: `meshtransport{i}/wire_sends` (or `fabric{i}/...`
+    # for Fabric subclasses — the scope is minted lazily from the class
+    # name on first touch)
+    wire_sends = metrics.counter_attr()
 
     def __init__(self, plan: TransferPlan | None = None, *,
                  staged: bool = False, vectorized: bool = True):

@@ -1,0 +1,416 @@
+"""ISSUE 6 — unified telemetry: registry semantics, datapath tracing,
+and the bench/report integration contracts.
+
+Covers the tentpole (hierarchical metric registry with zero-cost
+attribute views, opt-in Chrome-trace tracer) and the satellites that
+ride on it: single-source RNR accounting, TimingStats tail stats, the
+warn-not-fail registry gate in benchmarks/check.py, and the
+lint_counters static check. The load-bearing property: installing a
+tracer must leave delivered payloads and CQE order bit-exact vs the
+tracer-off oracle across random opcode mixes."""
+import importlib.util
+import os
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline rig: sampled fallback
+    from _hyp import given, settings, st
+
+from repro import verbs
+from repro.obs import metrics, trace
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(relpath, name):
+    """Import a repo file outside the src/ package tree (benchmarks/,
+    scripts/) without polluting sys.path for other tests."""
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(REPO_ROOT, relpath))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(autouse=True)
+def _isolated_registry():
+    """Each test gets a fresh default registry (instrumented verbs
+    objects scope themselves on construction) and a clean tracer."""
+    old = metrics.get_registry()
+    reg = metrics.fresh_registry()
+    yield reg
+    metrics.set_registry(old)
+    trace.uninstall()
+
+
+# -- registry core -----------------------------------------------------------
+def test_snapshot_and_diff_semantics(_isolated_registry):
+    reg = _isolated_registry
+    sc = reg.scope("qp3")
+    sc.counter("doorbell_writes").inc(5)
+    sc.gauge("credit").set(7)
+    sc.histogram("lat").observe_many([1.0, 2.0, 3.0])
+    before = reg.snapshot()
+    assert before["qp3/doorbell_writes"] == 5
+    assert before["qp3/credit"] == 7
+    assert before["qp3/lat"]["count"] == 3
+    sc.counter("doorbell_writes").inc(2)
+    sc.counter("rnr_retries").inc()                 # new after `before`
+    after = reg.snapshot()
+    d = metrics.Registry.diff(before, after)
+    assert d["qp3/doorbell_writes"] == 2            # counters subtract
+    assert d["qp3/rnr_retries"] == 1                # only-in-after as-is
+    assert d["qp3/lat"] == after["qp3/lat"]         # hist: keep `after`
+
+
+def test_scope_paths_indexing_and_reparent(_isolated_registry):
+    reg = _isolated_registry
+    assert reg.scope("cq", indexed=True).name == "cq0"
+    assert reg.scope("cq", indexed=True).name == "cq1"
+    fab = reg.scope("fabric", indexed=True)
+    qp = reg.scope("qp12")
+    c = qp.counter("desc_fetch_dmas").inc(3)
+    assert c.name == "qp12/desc_fetch_dmas"
+    qp.reparent(fab)                                 # attach to fabric
+    assert c.name == "fabric0/qp12/desc_fetch_dmas"  # same object moved
+    assert reg.snapshot() == {"fabric0/qp12/desc_fetch_dmas": 3}
+    # non-indexed names are singletons per parent
+    assert reg.scope("qp12") is qp
+
+
+def test_group_key_strips_instance_ids():
+    gk = metrics.Registry.group_key
+    assert gk("qp3/doorbell_writes") == "qp/doorbell_writes"
+    assert gk("fabric0/qp12/x") == "fabric/qp/x"
+    assert gk("cq0/ring1/dma_writes") == "cq/ring/dma_writes"
+
+
+def test_aggregate_sums_instances_and_merges_histograms(_isolated_registry):
+    reg = _isolated_registry
+    reg.scope("qp3").counter("doorbell_writes").inc(4)
+    reg.scope("qp7").counter("doorbell_writes").inc(6)
+    reg.scope("cq", indexed=True).gauge("fc_reserved").set(2)
+    reg.scope("cq", indexed=True).gauge("fc_reserved").set(3)
+    reg.scope("qp3").histogram("lat").observe_many([1.0, 9.0])
+    reg.scope("qp7").histogram("lat").observe_many([4.0])
+    agg = reg.aggregate()
+    assert agg["counters"] == {"qp/doorbell_writes": 10}
+    assert agg["gauges"] == {"cq/fc_reserved": 5}
+    h = agg["histograms"]["qp/lat"]
+    assert h["count"] == 3 and h["max"] == 9.0      # worst across instances
+
+
+def test_attr_views_route_through_registry(_isolated_registry):
+    class Widget:
+        pokes = metrics.counter_attr()
+        level = metrics.gauge_attr()
+
+        def __init__(self):
+            metrics.instance_scope(self, "widget", indexed=True)
+            self.pokes = 0
+            self.level = 0
+
+    w = Widget()
+    w.pokes += 3                        # plain augmented assignment
+    w.level = 9
+    assert w.pokes == 3 and w.level == 9
+    snap = _isolated_registry.snapshot()
+    assert snap["widget0/pokes"] == 3
+    assert snap["widget0/level"] == 9
+    agg = _isolated_registry.aggregate()
+    assert agg["counters"] == {"widget/pokes": 3}   # gauge not hard-gated
+    assert agg["gauges"] == {"widget/level": 9}
+
+
+def test_weak_probe_lifecycle(_isolated_registry):
+    class Pool:
+        def __init__(self):
+            self.depth = 4
+
+    reg = _isolated_registry
+    sc = reg.scope("srq", indexed=True)
+    # probe A: never sampled alive -> snapshots must SKIP it, not lie 0
+    a = Pool()
+    metrics.weak_probe(sc, "never_sampled", a, lambda p: p.depth)
+    del a
+    # probe B: sampled alive, then subject dies -> last value sticks
+    b = Pool()
+    metrics.weak_probe(sc, "depth", b, lambda p: p.depth)
+    assert reg.snapshot()["srq0/depth"] == 4
+    assert "srq0/never_sampled" not in reg.snapshot()
+    b.depth = 9
+    del b
+    assert reg.snapshot()["srq0/depth"] == 9 or \
+        reg.snapshot()["srq0/depth"] == 4           # GC timing either way
+    # counter-KIND probes still aggregate into the gauges bucket: a
+    # sampled view is not a deterministic event count for the perf gate
+    metrics.weak_probe(sc, "dma_launches", Pool(), lambda p: p.depth,
+                       kind="counter")
+    agg = reg.aggregate()
+    assert "srq/dma_launches" not in agg["counters"]
+
+
+# -- datapath instrumentation ------------------------------------------------
+def test_verbs_counters_land_in_registry(_isolated_registry):
+    pair = verbs.VerbsPair(depth=32)
+    for i in range(4):
+        pair.server.post_recv(verbs.RecvWR(wr_id=100 + i))
+    pair.client.post_send([verbs.SendWR(wr_id=i, payload=np.array(
+        [i], np.int64)) for i in range(4)])
+    pair.client.flush()
+    assert len(pair.server_recv_cq.poll()) == 4
+    snap = _isolated_registry.snapshot()
+    qp = pair.client
+    assert snap[f"qp{qp.qp_num}/doorbell_writes"] == qp.doorbell_writes > 0
+    assert snap[f"qp{qp.qp_num}/desc_fetch_dmas"] == qp.desc_fetch_dmas > 0
+    # CQ scopes exist with their notification rings nested under them
+    assert any(k.startswith("cq") and k.endswith("/dma_writes")
+               for k in snap), sorted(snap)
+    assert any(k.endswith("/fc_reserved") for k in snap)
+
+
+def test_rnr_counters_single_source(_isolated_registry):
+    """Satellite: RNR stats live ONCE (on the QP scope under the
+    fabric); Fabric.rnr_* are views summing its attached QPs, so the
+    old double-booked fabric-level counters are gone from snapshots."""
+    f = verbs.Fabric(rnr_retry=0)
+    addr = f.node(f.gids[0]).listen(depth=32, srq=None)
+    ep = f.connect(addr, depth=32)
+    ep.post_send(verbs.SendWR(wr_id=1, payload=np.array([1], np.int64)))
+    ep.flush()                                      # immediate RNR_ERR
+    assert f.rnr_exhausted == ep.qp.rnr_exhausted == 1
+    assert f.rnr_retries == ep.qp.rnr_retries == 0
+    snap = _isolated_registry.snapshot()
+    exhausted = [k for k in snap if k.endswith("/rnr_exhausted")]
+    # per-QP counters under the fabric scope are the ONLY storage — the
+    # old duplicate fabric-level counter must not exist in the registry
+    assert exhausted and all(k.startswith("fabric0/qp") for k in exhausted)
+    assert "fabric0/rnr_exhausted" not in snap
+    assert sum(snap[k] for k in exhausted) == f.rnr_exhausted == 1
+    # the fabric view survives the QP teardown (counters outlive scopes)
+    ep.qp.destroy()
+    assert f.rnr_exhausted == 1
+
+
+# -- tracer ------------------------------------------------------------------
+def _step_clock(step=1000):
+    t = [0]
+
+    def clock():
+        t[0] += step
+        return t[0]
+
+    return clock
+
+
+def test_trace_export_golden():
+    """Chrome trace_event golden: with a pinned clock the export is an
+    exact dict — perfetto-loadable shape, µs-relative timestamps,
+    thread_name metadata per logical tid."""
+    tr = trace.Tracer(capacity=16, clock=_step_clock())
+    t0 = tr.now()                                   # 1000
+    tr.complete("post_send", t0, qp=3, wrs=2)       # [1000, 2000)
+    tr.instant("doorbell", qp=3)                    # 3000
+    t0 = tr.now()                                   # 4000
+    tr.complete("poll_cq", t0, tid="cq0", cqes=2)   # [4000, 5000)
+    assert tr.export() == {
+        "displayTimeUnit": "ns",
+        "traceEvents": [
+            {"ph": "M", "pid": 1, "tid": 1, "name": "thread_name",
+             "args": {"name": "datapath"}},
+            {"ph": "X", "name": "post_send", "cat": "verbs", "pid": 1,
+             "tid": 1, "ts": 0.0, "dur": 1.0, "args": {"qp": 3, "wrs": 2}},
+            {"ph": "i", "name": "doorbell", "cat": "verbs", "pid": 1,
+             "tid": 1, "ts": 2.0, "s": "t", "args": {"qp": 3}},
+            {"ph": "M", "pid": 1, "tid": 2, "name": "thread_name",
+             "args": {"name": "cq0"}},
+            {"ph": "X", "name": "poll_cq", "cat": "verbs", "pid": 1,
+             "tid": 2, "ts": 3.0, "dur": 1.0, "args": {"cqes": 2}},
+        ],
+    }
+
+
+def test_trace_ring_bounded_drops_oldest():
+    tr = trace.Tracer(capacity=4, clock=_step_clock())
+    for i in range(10):
+        tr.instant(f"e{i}")
+    assert len(tr) == 4 and tr.dropped == 6
+    assert [e[1] for e in tr.events()] == ["e6", "e7", "e8", "e9"]
+
+
+def test_tracing_contextmanager_always_uninstalls():
+    assert trace.TRACER is None
+    with trace.tracing() as t:
+        assert trace.TRACER is t
+    assert trace.TRACER is None
+    with pytest.raises(RuntimeError):
+        with trace.tracing():
+            raise RuntimeError("boom")
+    assert trace.TRACER is None                     # exception-safe
+
+
+def test_datapath_span_chain_recorded():
+    """A traced SEND records the full FlexiNS stage chain:
+    post_send -> doorbell -> dispatch_run -> cqe_publish -> poll_cq."""
+    with trace.tracing() as t:
+        pair = verbs.VerbsPair(depth=32)
+        pair.server.post_recv(verbs.RecvWR(wr_id=9))
+        pair.client.post_send(verbs.SendWR(
+            wr_id=1, payload=np.array([5], np.int64)))
+        pair.client.flush()
+        assert len(pair.server_recv_cq.poll()) == 1
+    names = [e[1] for e in t.events()]
+    assert "post_send" in names and "doorbell" in names
+    assert any(n.startswith("dispatch_run:SEND") for n in names)
+    assert "cqe_publish" in names and "poll_cq" in names
+    # stage order within the chain
+    assert names.index("post_send") < names.index("doorbell")
+    assert names.index("doorbell") < \
+        min(i for i, n in enumerate(names) if n.startswith("dispatch_run"))
+    assert names.index("cqe_publish") < names.index("poll_cq")
+
+
+# -- tracing-on == tracer-off oracle (bit-exactness) -------------------------
+_KINDS = ("send_inline", "send_big", "send_unsig", "write", "read")
+
+
+def _run_chain(kinds, n_recv, seed):
+    pair = verbs.VerbsPair(depth=64, max_wr=64)
+    dst = pair.pd.reg_mr("dst", np.zeros((8, 4), np.float32))
+    rng = np.random.default_rng(seed)
+    for i in range(n_recv):
+        pair.server.post_recv(verbs.RecvWR(wr_id=100 + i))
+    wrs = []
+    for i, kind in enumerate(kinds):
+        if kind == "send_inline":
+            wrs.append(verbs.SendWR(wr_id=i, payload=np.array(
+                [i, 7], np.int32)))
+        elif kind == "send_big":
+            wrs.append(verbs.SendWR(wr_id=i, inline=False, payload=rng
+                       .standard_normal(40).astype(np.float32)))
+        elif kind == "send_unsig":
+            wrs.append(verbs.SendWR(wr_id=i, signaled=False,
+                                    payload=np.array([i], np.int64)))
+        elif kind == "write":
+            k = int(rng.integers(1, 4))
+            wrs.append(verbs.SendWR(
+                wr_id=i, opcode=verbs.IBV_WR_RDMA_WRITE,
+                remote_key=dst.rkey,
+                remote_offsets=rng.choice(8, size=k, replace=False),
+                payload=rng.standard_normal((k, 4)).astype(np.float32)))
+        elif kind == "read":
+            wrs.append(verbs.SendWR(
+                wr_id=i, opcode=verbs.IBV_WR_RDMA_READ,
+                remote_key=dst.rkey, remote_offsets=[int(
+                    rng.integers(0, 8))]))
+    pair.client.post_send(wrs)
+    processed = pair.client.flush()
+    return dict(
+        processed=processed, stalled=len(pair.client.sq),
+        send_wcs=pair.client_cq.poll(), recv_wcs=pair.server_recv_cq.poll(),
+        region=np.asarray(pair.pd.engine.regions["dst"]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.sampled_from(_KINDS), min_size=1, max_size=16),
+       st.integers(0, 16), st.integers(0, 1 << 16))
+def test_tracing_is_bit_exact_vs_tracer_off(kinds, n_recv, seed):
+    """Installing the tracer must not perturb the datapath: delivered
+    payloads, CQE order/status and MR contents identical to the
+    tracer-off run across random opcode mixes and recv budgets
+    (including mid-chain RNR stalls)."""
+    base = _run_chain(kinds, n_recv, seed)
+    with trace.tracing():
+        traced = _run_chain(kinds, n_recv, seed)
+    assert base["processed"] == traced["processed"]
+    assert base["stalled"] == traced["stalled"]
+    np.testing.assert_array_equal(base["region"], traced["region"])
+    for key in ("send_wcs", "recv_wcs"):
+        a, b = base[key], traced[key]
+        assert [(w.wr_id, w.opcode, w.status, w.length) for w in a] == \
+               [(w.wr_id, w.opcode, w.status, w.length) for w in b], key
+        for x, y in zip(a, b):
+            if x.data is None or y.data is None:
+                assert x.data is None and y.data is None
+            else:
+                np.testing.assert_array_equal(np.asarray(x.data),
+                                              np.asarray(y.data))
+
+
+# -- bench integration: TimingStats, check gate, counter lint ----------------
+def test_timing_stats_scalar_compatible():
+    common = _load("benchmarks/common.py", "_obs_test_common")
+    ts = common.TimingStats([3.0, 1.0, 2.0])
+    assert float(ts) == 2.0 and ts == 2.0           # value IS the median
+    assert ts.p50 == 2.0 and ts.p95 == 3.0 and ts.max == 3.0
+    assert ts.samples == [1.0, 2.0, 3.0]
+    assert ts * 2 == 4.0                            # plain float math
+
+
+def _bench_json(tmp_path, fname, counters=None, with_block=True):
+    import json
+    payload = {"rows": []}
+    if with_block:
+        payload["metrics"] = {"counters": counters or {},
+                              "gauges": {}, "histograms": {}}
+    p = tmp_path / fname
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_check_metrics_gate(tmp_path):
+    """Satellite regression test: the generic registry gate fails on a
+    >20%+slack counter rise, and ONLY warns when a metric exists on one
+    side only (new instrumentation vs stale baseline, or vice versa)."""
+    check = _load("benchmarks/check.py", "_obs_test_check")
+    base = _bench_json(tmp_path, "base.json",
+                       {"qp/doorbell_writes": 100, "qp/rnr_retries": 0})
+    # regression: 100 -> 130 is past 20% + slack 2
+    fresh = _bench_json(tmp_path, "f1.json",
+                        {"qp/doorbell_writes": 130, "qp/rnr_retries": 0})
+    assert check.check_metrics("x", base, fresh)
+    # within tolerance+slack: 100 -> 122 passes; near-zero slack: 0 -> 2
+    fresh = _bench_json(tmp_path, "f2.json",
+                        {"qp/doorbell_writes": 122, "qp/rnr_retries": 2})
+    assert check.check_metrics("x", base, fresh) == []
+    # fresh-only counter (baseline predates it): warn, never fail
+    fresh = _bench_json(tmp_path, "f3.json",
+                        {"qp/doorbell_writes": 100, "qp/rnr_retries": 0,
+                         "serve/requests_submitted": 500})
+    assert check.check_metrics("x", base, fresh) == []
+    # vanished counter: warn, never fail
+    fresh = _bench_json(tmp_path, "f4.json", {"qp/doorbell_writes": 100})
+    assert check.check_metrics("x", base, fresh) == []
+    # pre-telemetry baseline without a metrics block: nothing to gate
+    base_old = _bench_json(tmp_path, "b0.json", with_block=False)
+    fresh = _bench_json(tmp_path, "f5.json", {"qp/doorbell_writes": 9999})
+    assert check.check_metrics("x", base_old, fresh) == []
+
+
+def test_lint_counters_flags_bare_counters(tmp_path):
+    """Satellite: the static check catches a NEW public self.<name> += 1
+    under the scanned root unless the name is a declared registry view
+    somewhere in the tree; private attributes stay exempt."""
+    lintmod = _load("scripts/lint_counters.py", "_obs_test_lint")
+    (tmp_path / "good.py").write_text(
+        "from repro.obs import metrics\n"
+        "class QP:\n"
+        "    doorbell_writes = metrics.counter_attr()\n"
+        "    def ring(self):\n"
+        "        self.doorbell_writes += 1\n"
+        "        self._seq += 1\n")
+    assert lintmod.lint(str(tmp_path)) == []
+    (tmp_path / "bad.py").write_text(
+        "class Rogue:\n"
+        "    def tick(self):\n"
+        "        self.sneaky_events += 1\n")
+    violations = lintmod.lint(str(tmp_path))
+    assert len(violations) == 1 and "sneaky_events" in violations[0]
+    # the shipped tree itself must be clean
+    assert lintmod.lint(os.path.join(REPO_ROOT, "src", "repro",
+                                     "verbs")) == []
