@@ -15,6 +15,8 @@ if ! python -c "import repro" 2>/dev/null; then
 fi
 # telemetry lint: new verbs counters must live in the repro.obs registry
 python scripts/lint_counters.py
+# hot-path lint: no host-device syncs inside jitted dispatch functions
+python scripts/lint_hot_path.py
 if [[ "${1:-}" == "--smoke" ]]; then
     exec python -m pytest -x -q -m "not slow" "${@:2}"
 fi

@@ -34,6 +34,22 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
                check_rep=check_vma)
 
 
+def jit(fn=None, **kwargs):
+    """``jax.jit`` behind the repo's one indirection point. Every NEW jit
+    (or pallas-wrapping) entry point routes through here per the standing
+    PR 2 rule, so a signature drift between the pinned 0.4.x rig and a
+    newer dev JAX is a one-line fix instead of a grep. Usable bare or
+    with kwargs (``@compat.jit`` / ``@partial(compat.jit, ...)`` /
+    ``compat.jit(f, donate_argnums=(0,))``).
+
+    Donation is best-effort by design: platforms without donation
+    support (0.4.x CPU) copy and warn once per call site — the fused
+    datapath must stay correct, not merely fast, without it."""
+    if fn is None:
+        return lambda f: jit(f, **kwargs)
+    return jax.jit(fn, **kwargs)
+
+
 def cost_analysis(compiled) -> dict:
     """``Compiled.cost_analysis()`` as a flat dict: 0.4.x wraps the
     per-device properties in a one-element list, newer JAX returns the

@@ -44,15 +44,31 @@ class Ring:
 
     def __init__(self, capacity: int, width: int = DESCRIPTOR_WIDTH,
                  publish_every: int = 8, vectorized: bool = True,
-                 metrics_parent=None):
+                 metrics_parent=None, device: bool = False):
         assert capacity > 0
         metrics.instance_scope(self, "ring", indexed=True,
                                parent=metrics_parent)
         self.capacity = capacity
         self.width = width
         self.vectorized = vectorized
-        self.slots = np.zeros((capacity, width), np.int64)
-        self.flags = np.zeros((capacity,), np.uint8)     # starts invalid (0)
+        # device=True keeps slot memory + valid flags resident on the
+        # device and lands each produce/consume in ONE jitted launch with
+        # donated buffers (kernels/desc_ring). Head/tail/credit/publish
+        # bookkeeping stays host-side and identical — the protocol does
+        # not change, only where the slot memcpy runs.
+        self.device = device
+        if device:
+            if not vectorized:
+                raise ValueError("device ring requires vectorized=True "
+                                 "(the oracle never compiles)")
+            from repro.kernels.desc_ring import ops as _ring_ops
+            self._ring_ops = _ring_ops
+            # int32-PAIR slot rows: device int64 would truncate under the
+            # repo's x64=off pin, so 64B cachelines cross as byte views
+            self.slots, self.flags = _ring_ops.alloc(capacity, width)
+        else:
+            self.slots = np.zeros((capacity, width), np.int64)
+            self.flags = np.zeros((capacity,), np.uint8)  # starts invalid
         self.head = 0          # producer monotonic index
         self.tail = 0          # consumer monotonic index
         self.publish_every = publish_every
@@ -91,18 +107,28 @@ class Ring:
             if self._credit() < n:
                 raise RingFullError(
                     f"need {n} slots, have {self._credit()}")
-        if self.vectorized:
+        if self.device:
+            # ONE donated launch writes slots and flags in-graph
+            self.slots, self.flags = self._ring_ops.produce(
+                self.slots, self.flags, self.head, batch)
+        elif self.vectorized:
             # credit <= capacity, so the batch wraps at most once: the
             # whole memcpy is at most two slice assignments
             s0 = self.head % self.capacity
             first = min(n, self.capacity - s0)
-            fl = self._valid_flag(self.head + np.arange(n),
-                                  self.capacity).astype(np.uint8)
-            self.slots[s0:s0 + first] = batch[:first]
-            self.flags[s0:s0 + first] = fl[:first]
-            if first < n:
-                self.slots[:n - first] = batch[first:]
-                self.flags[:n - first] = fl[first:]
+            if n == 1:
+                # single-descriptor fast path (RPCs, 1-WR chains): scalar
+                # flag math, no arange/astype round trip
+                self.slots[s0] = batch[0]
+                self.flags[s0] = 1 - ((self.head // self.capacity) % 2)
+            else:
+                fl = self._valid_flag(self.head + np.arange(n),
+                                      self.capacity).astype(np.uint8)
+                self.slots[s0:s0 + first] = batch[:first]
+                self.flags[s0:s0 + first] = fl[:first]
+                if first < n:
+                    self.slots[:n - first] = batch[first:]
+                    self.flags[:n - first] = fl[first:]
         else:
             for i in range(n):
                 idx = self.head + i
@@ -120,8 +146,42 @@ class Ring:
         if not self.vectorized:
             return self._consume_scalar(max_n)
         limit = self.capacity if max_n is None else min(max_n, self.capacity)
+        # occupancy cap: slots at/past the head cannot be valid (their
+        # flags still carry the previous lap), so never scan them — same
+        # k, smaller scan (the 1-WR poll checks 1 flag, not capacity)
+        limit = min(limit, self.head - self.tail)
         if limit <= 0:
             return np.zeros((0, self.width), np.int64)
+        if self.device:
+            out = self._ring_ops.consume(self.slots, self.flags,
+                                         self.tail, limit)
+            k = out.shape[0]
+            if k == 0:
+                return out
+            self.tail += k
+            total = self._since_publish + k
+            if total >= self.publish_every:
+                self._since_publish = total % self.publish_every
+                self._published_tail = self.tail - self._since_publish
+            else:
+                self._since_publish = total
+            return out
+        if limit == 1:
+            # single-descriptor poll (RPC round trips): one scalar flag
+            # check, no arange/argmin scan
+            tail = self.tail
+            s = tail % self.capacity
+            if self.flags[s] != 1 - ((tail // self.capacity) % 2):
+                return np.zeros((0, self.width), np.int64)
+            out = self.slots[s:s + 1].copy()
+            self.tail = tail + 1
+            total = self._since_publish + 1
+            if total >= self.publish_every:
+                self._since_publish = total % self.publish_every
+                self._published_tail = self.tail - self._since_publish
+            else:
+                self._since_publish = total
+            return out
         # one vectorized validity scan from the tail (entries outstanding
         # never exceed capacity), then one gather for the valid prefix
         idx = self.tail + np.arange(limit)
@@ -160,6 +220,18 @@ class Ring:
     def force_publish(self):
         self._published_tail = self.tail
         self._since_publish = 0
+
+    def slots_view(self) -> np.ndarray:
+        """Host int64 view of the slot memory (tests/introspection): a
+        device ring transfers its int32-pair buffer and reinterprets the
+        bytes — bit-exact with the host ring's slots."""
+        if self.device:
+            return np.ascontiguousarray(
+                np.asarray(self.slots)).view(np.int64)
+        return self.slots
+
+    def flags_view(self) -> np.ndarray:
+        return np.asarray(self.flags) if self.device else self.flags
 
     def free_slots(self) -> int:
         """Slots the producer could fill right now given the TRUE consumer

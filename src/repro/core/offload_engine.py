@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.descriptors import (OP_BATCH_READ, OP_LIST_TRAVERSAL)
+from repro.kernels.wr_scatter import ops as wr_scatter_ops
 
 
 def dedupe_last_wins(offs: np.ndarray, vals):
@@ -99,7 +100,13 @@ class QPContext:
         retire in submission order — only a READ->WRITE or WRITE->READ
         boundary fences, so read-after-write sees the write (RC
         ordering) while a write-free batch of N reads costs ONE gather
-        and a read-free batch of N writes ONE scatter."""
+        and a read-free batch of N writes ONE scatter.
+
+        The coalescing path launches through the fused jitted ops
+        (`kernels/wr_scatter/ops`, counted as `fused/launches`; scatter
+        DONATES the outgoing region buffer). The oracle
+        (`coalesce_writes=False`) keeps eager per-op `at[].set`/`take`
+        calls — it never compiles, by contract."""
         pending = [(i, d) for i, d in enumerate(
             self._dma_queue[self._scan_from:], start=self._scan_from)
             if i not in self._dma_done]
@@ -118,8 +125,11 @@ class QPContext:
                 assert all(d.length == L for _, d in reads), \
                     "mixed record sizes in one flush group"
                 offs = np.concatenate([d.offsets.ravel() for _, d in reads])
-                idx = offs[:, None].astype(np.int64) * L + np.arange(L)
-                flat = jnp.take(arr.ravel(), jnp.asarray(idx), axis=0)
+                if self.coalesce_writes:
+                    flat = wr_scatter_ops.gather_records(arr, offs, L)
+                else:
+                    idx = offs[:, None].astype(np.int64) * L + np.arange(L)
+                    flat = jnp.take(arr.ravel(), jnp.asarray(idx), axis=0)
                 self.dma_launches += 1
                 c = 0
                 for i, d in reads:
@@ -130,7 +140,11 @@ class QPContext:
 
             def scatter_one(i: int, d: DmaOp):
                 arr = self.engine.regions[region]
-                self.engine.regions[region] = arr.at[d.offsets].set(d.buf)
+                if self.coalesce_writes:
+                    self.engine.regions[region] = \
+                        wr_scatter_ops.scatter_one(arr, d.offsets, d.buf)
+                else:
+                    self.engine.regions[region] = arr.at[d.offsets].set(d.buf)
                 self._dma_done[i] = True
                 self.dma_launches += 1
 
@@ -167,8 +181,10 @@ class QPContext:
                     [d.offsets.ravel() for _, d in writes]).astype(np.int64)
                 vals = np.concatenate(bufs) if len(bufs) > 1 else bufs[0]
                 offs, vals = dedupe_last_wins(offs, vals)
-                self.engine.regions[region] = \
-                    self.engine.regions[region].at[offs].set(vals)
+                # scatter_run only exists on the coalescing path (the
+                # oracle scatters per-op above): always a fused launch
+                self.engine.regions[region] = wr_scatter_ops.scatter_records(
+                    self.engine.regions[region], offs, vals)
                 self.dma_launches += 1
                 for i, _ in writes:
                     self._dma_done[i] = True

@@ -1,0 +1,45 @@
+"""Device-resident T3 descriptor ring — in-graph produce/consume.
+
+The host `Ring` models NIC SRAM with numpy slot memory; `Ring(device=
+True)` keeps slots + valid flags as device buffers and lands each
+produce/consume in ONE jitted launch with donated buffers (the
+device-resident CQE publish of ISSUE 7). Same lap-parity protocol as
+the host ring: slot i is valid on lap L iff flags[i] == 1 - L % 2.
+
+Descriptors are 64B int64 cachelines on the host; under the repo's
+x64=off pin a device int64 buffer would silently truncate, so slot
+memory crosses the boundary as (capacity, 2*WIDTH) int32 pairs — a pure
+byte reinterpretation, bit-exact both ways (see kernels/desc_ring/ops).
+
+Head/tail stay HOST-side python ints (credit math, publish batching and
+dma counters are control-plane); they enter the graph reduced mod
+2*capacity, which preserves both the slot index and the lap parity while
+keeping the traced arithmetic clear of int32 overflow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def produce(slots, flags, batch, head):
+    """Write `batch` rows at ring positions head.. with lap-parity valid
+    flags. slots: (cap, F); flags: (cap,); batch: (n, F); head already
+    reduced mod 2*cap by the caller."""
+    cap = slots.shape[0]
+    idx = head + jnp.arange(batch.shape[0])
+    s = idx % cap
+    fl = (1 - (idx // cap) % 2).astype(flags.dtype)
+    return slots.at[s].set(batch), flags.at[s].set(fl)
+
+
+def consume(slots, flags, tail):
+    """Rotate the ring to start at `tail` (reduced mod 2*cap) and return
+    (rotated slots, k) where k is the length of the valid prefix — the
+    full-capacity scan compiles ONCE per ring; the host clamps k by its
+    max_n/occupancy budget and slices rows [:k]."""
+    cap = flags.shape[0]
+    idx = tail + jnp.arange(cap)
+    s = idx % cap
+    ok = flags[s] == (1 - (idx // cap) % 2).astype(flags.dtype)
+    k = jnp.where(ok.all(), cap, jnp.argmin(ok))
+    return slots[s], k

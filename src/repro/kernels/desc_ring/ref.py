@@ -1,0 +1,25 @@
+"""Numpy oracle for the device ring's produce/consume (the host `Ring`
+in `core/notification.py` is the system-level reference; this is the
+kernel-level one for tests/test_kernels.py-style checks)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def reference_produce(slots, flags, batch, head):
+    slots, flags = slots.copy(), flags.copy()
+    cap = slots.shape[0]
+    idx = head + np.arange(batch.shape[0])
+    s = idx % cap
+    slots[s] = batch
+    flags[s] = (1 - (idx // cap) % 2).astype(flags.dtype)
+    return slots, flags
+
+
+def reference_consume(slots, flags, tail):
+    cap = flags.shape[0]
+    idx = tail + np.arange(cap)
+    s = idx % cap
+    ok = flags[s] == (1 - (idx // cap) % 2).astype(flags.dtype)
+    k = cap if ok.all() else int(np.argmin(ok))
+    return slots[s], k

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for wr_scatter / the fused gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def reference(region, vals, offs):
+    return region.at[jnp.asarray(offs)].set(
+        jnp.asarray(vals).astype(region.dtype))
+
+
+def reference_gather(region, idx):
+    """Flat-element gather: idx indexes region.ravel()."""
+    return jnp.take(jnp.asarray(region).ravel(), jnp.asarray(idx), axis=0)

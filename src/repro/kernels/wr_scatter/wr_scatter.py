@@ -1,0 +1,54 @@
+"""WRITE-run scatter kernel — the fused T4 flush (ISSUE 7 tentpole).
+
+A coalesced run of record WRITEs (an RDMA_WRITE chain, or a SEND run
+landing in one posted MR) is ONE scatter: record rows stream through
+VMEM while the destination offsets ride SMEM as a scalar-prefetched
+"header", exactly the kv_ingest shape — each visited record block is
+overwritten in place and the untouched remainder of the region is
+carried through input/output aliasing.
+
+Duplicate offsets are the CALLER's problem: the verbs layer dedupes
+last-writer-wins (`dedupe_last_wins`) before launching, because a
+revisited output block's ordering is unspecified here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(offs_ref, vals_ref, region_in_ref, out_ref):
+    del offs_ref, region_in_ref
+    out_ref[...] = vals_ref[...]
+
+
+def wr_scatter(region, vals, offs, *, interpret=False):
+    """region: (R, F...); vals: (m, F...); offs: (m,) record indices.
+
+    Returns the region with vals[i] written at record offs[i]."""
+    m = vals.shape[0]
+    R = region.shape[0]
+    rec = region.shape[1:]
+    flat_region = region.reshape(R, -1)
+    flat_vals = vals.reshape(m, -1).astype(flat_region.dtype)
+    F = flat_region.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, F), lambda i, offs: (i, 0)),
+            pl.BlockSpec((1, F), lambda i, offs: (offs[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, F), lambda i, offs: (offs[i], 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, F), flat_region.dtype),
+        input_output_aliases={2: 0},       # region updated in place
+        interpret=interpret,
+    )(jnp.asarray(offs, jnp.int32), flat_vals, flat_region)
+    return out.reshape((R,) + rec)

@@ -49,12 +49,18 @@ class CompletionQueue:
     fc_reserved = metrics.gauge_attr()
 
     def __init__(self, depth: int = 256, publish_every: int = 8,
-                 vectorized: bool = True):
+                 vectorized: bool = True, *, device_ring: bool = False):
         metrics.instance_scope(self, "cq", indexed=True)
         self.vectorized = vectorized
+        # device_ring=True publishes CQEs into a device-resident ring:
+        # each flush's staged block lands in ONE jitted, donated produce
+        # launch (kernels/desc_ring) instead of a host memcpy. Opt-in,
+        # vectorized-only — the oracle never compiles.
+        if device_ring and not vectorized:
+            raise ValueError("device_ring requires vectorized=True")
         self.ring = Ring(depth, publish_every=publish_every,
                          vectorized=vectorized,
-                         metrics_parent=self._metrics)
+                         metrics_parent=self._metrics, device=device_ring)
         # staged CQEs live as ONE (n, width) block: staging a batch is an
         # array concat and publishing a chunk is a slice, never a python
         # loop over rows
@@ -195,11 +201,18 @@ class CompletionQueue:
         if descs.shape[0] == 0:
             return []
         if self.vectorized:
+            if descs.shape[0] == 1:
+                # single-CQE drain (RPC round trips): the scalar field
+                # decode beats the batch decode's fixed numpy overhead
+                f = wqe.cqe_fields(descs[0])
+                return [WorkCompletion(f["wr_id"], f["opcode"],
+                                       f["status"], f["length"],
+                                       self._sideband.pop(f["seq"], None))]
             # one array decode for the whole drained block, then plain
             # python scalars out of `.tolist()` (no per-row np indexing)
             f = wqe.decode_cqe_batch(descs)
-            return [WorkCompletion(wr_id=w, opcode=o, status=s, length=ln,
-                                   data=self._sideband.pop(q, None))
+            pop = self._sideband.pop
+            return [WorkCompletion(w, o, s, ln, pop(q, None))
                     for w, o, s, ln, q in zip(
                         f["wr_id"].tolist(), f["opcode"].tolist(),
                         f["status"].tolist(), f["length"].tolist(),

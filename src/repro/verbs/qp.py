@@ -104,13 +104,19 @@ class RecvWR:
     offsets: Any = None
 
 
-@dataclass
+@dataclass(slots=True)
 class _PostedSend:
     desc: np.ndarray
     wr: SendWR
     inline_row: np.ndarray | None = None
     inline_nbytes: int = 0
     inline_dtype: int = 0
+    # chain-pack provenance: (block, j) when the inline row is row j of a
+    # pack_inline_batch block — a whole run whose rows are consecutive in
+    # ONE block is delivered with one batched unpack (zero-copy slices).
+    # Chain-built WRs carry ONLY this (inline_row stays None; the row is
+    # block[j], sliced lazily if a scalar delivery ever needs it).
+    inline_src: tuple | None = None
     # CQs holding a flow-control slot reservation for this WR (claimed at
     # post time, released when the WR retires and its CQE occupies the
     # slot for real)
@@ -390,20 +396,97 @@ class QueuePair:
         return _PostedSend(desc, wr, inline_row, nbytes, dcode)
 
     def _build_wqe_chain(self, chain: list[SendWR]) -> list[_PostedSend]:
-        """Stage an N-WR chain with ONE descriptor-block encode: the
-        per-WR python is only the payload-dependent field extraction."""
-        metas = [self._wqe_fields(w) for w in chain]
+        """Stage an N-WR chain with ONE descriptor-block encode and ONE
+        batched inline pack: the per-WR python is plain attribute
+        traversal; byte packing and the descriptor encode are each a
+        single array pass (`pack_inline_batch` / `encode_wqe_batch`).
+        Field-for-field this mirrors the scalar `_wqe_fields` — the
+        bit-exactness property tests hold the two together."""
+        n = len(chain)
+        lkeys = [0] * n
+        roffs = [0] * n
+        lengths = [0] * n
+        flagv = [0] * n
+        dcodes = [0] * n
+        inline_meta: list = [None] * n      # i -> (block, j, nbytes, dcode)
+        pack_idx: list[int] = []            # chain indices headed to pack
+        pack_payloads: list = []
+        ro_fix: list[tuple[int, int, int]] = []   # (i, size, first offset)
+        # module-lookup hoists: this loop runs per WR on the hot path
+        SEND, WRITE = wqe.IBV_WR_SEND, wqe.IBV_WR_RDMA_WRITE
+        SIG, CUSTOM = wqe.WQE_F_SIGNALED, wqe.WQE_F_CUSTOM
+        VERBS, CODES = wqe._VERB_OPCODES, wqe._DTYPE_CODES
+        INL_MAX, ndarray = wqe.INLINE_MAX_BYTES, np.ndarray
+        pk_append, pl_append = pack_idx.append, pack_payloads.append
+        # payload-object memo: chains routinely post ONE payload object
+        # many times (RPC fan-out, the send benches); its inlinability
+        # verdict — a pure function of (payload, inline) — is computed
+        # once and replayed by identity
+        memo_p = memo_inline = memo = None
+        for i, w in enumerate(chain):
+            op = w.opcode
+            if op == WRITE and w.payload is None and w.mr is None:
+                raise ValueError("RDMA_WRITE needs a payload or a source MR")
+            f = SIG if w.signaled else 0
+            if op not in VERBS:
+                f |= CUSTOM
+            flagv[i] = f
+            if op == SEND and w.mr is None and w.inline is not False:
+                p = w.payload
+                if p is memo_p and w.inline is memo_inline \
+                        and memo_p is not None:
+                    ok, a = memo
+                else:
+                    if isinstance(p, ndarray):
+                        a = p
+                    elif w.inline is None and (
+                            p is None or isinstance(p, (dict, tuple, list))):
+                        a = None            # _flat_inlinable rejects these
+                    else:
+                        try:
+                            a = np.asarray(p)
+                        except Exception:
+                            a = None
+                    ok = a is not None \
+                        and (w.inline is True or a.ndim <= 1) \
+                        and a.dtype in CODES \
+                        and a.nbytes <= INL_MAX
+                    memo_p, memo_inline, memo = p, w.inline, (ok, a)
+                if ok:
+                    pk_append(i)
+                    pl_append(a)
+                elif w.inline is True:
+                    wqe.pack_inline(p)      # raises the scalar-path error
+            if w.remote_offsets is not None:
+                offs = np.asarray(w.remote_offsets)
+                ro_fix.append((i, int(offs.size), int(offs.ravel()[0])))
+            if w.mr is not None:
+                lkeys[i] = w.mr.lkey
+        if pack_idx:
+            rows, nbs, dcs = wqe.pack_inline_batch(pack_payloads)
+            INLINE = wqe.WQE_F_INLINE
+            for j, (i, nb, dc) in enumerate(
+                    zip(pack_idx, nbs.tolist(), dcs.tolist())):
+                flagv[i] |= INLINE
+                lengths[i] = nb
+                dcodes[i] = dc
+                inline_meta[i] = (rows, j, nb, dc)
+        for i, size, first in ro_fix:       # remote_offsets wins on length
+            lengths[i] = size
+            roffs[i] = first
         descs = wqe.encode_wqe_batch(
             [w.opcode for w in chain],
             wr_ids=[w.wr_id for w in chain],
             rkeys=[w.remote_key for w in chain],
-            lkeys=[m[0] for m in metas],
-            remote_offsets=[m[1] for m in metas],
-            lengths=[m[2] for m in metas],
-            flags=[m[3] for m in metas],
-            dtype_codes=[m[4] for m in metas])
-        return [_PostedSend(descs[i], w, m[5], m[6], m[4])
-                for i, (w, m) in enumerate(zip(chain, metas))]
+            lkeys=lkeys, remote_offsets=roffs, lengths=lengths,
+            flags=flagv, dtype_codes=dcodes)
+        # inline_row stays None: the (block, j) provenance IS the row —
+        # materializing n row views here costs more than the whole
+        # batched unpack that usually consumes them
+        return [
+            _PostedSend(d, w) if m is None else
+            _PostedSend(d, w, None, m[2], m[3], inline_src=(m[0], m[1]))
+            for d, w, m in zip(descs, chain, inline_meta)]
 
     # -- progress -----------------------------------------------------------
     def flush(self):

@@ -46,6 +46,16 @@ from repro.verbs.qp import QPState, QPStateError, QueuePair, RecvWR, SendWR
 _OP_NAMES = {wqe.IBV_WR_SEND: "SEND", wqe.IBV_WR_RDMA_WRITE: "RDMA_WRITE",
              wqe.IBV_WR_RDMA_READ: "RDMA_READ"}
 
+# Small-chain fast path: at or below this send-queue depth, run-grouping
+# and batch staging cost more than they save, so vectorized dispatch
+# takes the element-at-a-time path (same observable behavior — the two
+# paths are held together by the bit-exactness property tests). Exactly
+# 1: multi-WR chains get the batched path's all-or-nothing claim-release
+# semantics (test_send_run_failure_mid_run_releases_claims,
+# test_malformed_recv_offsets_fail_without_phantom_success), which a
+# single-WR dispatch trivially satisfies either way.
+SCALAR_DISPATCH_MAX = 1
+
 
 def _op_name(op: int) -> str:
     return _OP_NAMES.get(op, f"CUSTOM_{op:#x}")
@@ -208,8 +218,14 @@ class LoopbackTransport:
             if vec:
                 for st in stages.values():
                     t0 = tr.now() if tr is not None else 0
-                    st.cq.push_batch(wqe.encode_cqe_batch(
-                        st.ops, st.ids, st.sts, st.lens), st.datas)
+                    if len(st.ops) == 1:        # RPC-sized publish: the
+                        block = wqe.encode_cqe(  # scalar encode is cheaper
+                            st.ops[0], st.ids[0], st.sts[0],
+                            st.lens[0])[None]
+                    else:
+                        block = wqe.encode_cqe_batch(
+                            st.ops, st.ids, st.sts, st.lens)
+                    st.cq.push_batch(block, st.datas)
                     st.cq.flush()
                     if tr is not None:
                         tr.complete("cqe_publish", t0,
@@ -245,6 +261,20 @@ class LoopbackTransport:
     def _dispatch(self, qp, stage, reads, touch) -> int:
         if not self.vectorized:
             return self._dispatch_scalar(qp, stage, reads, touch)
+        if len(qp.sq) <= SCALAR_DISPATCH_MAX:
+            # tiny chains (RPCs, single sends) skip run-grouping; CQE
+            # staging and the T4 flush stay batch-wise either way. The
+            # dispatch span survives the shortcut — the trace chain is
+            # part of the datapath contract (test_obs).
+            tr = trace.TRACER
+            if tr is None or not qp.sq:
+                return self._dispatch_scalar(qp, stage, reads, touch)
+            op = qp.sq[0].wr.opcode
+            t0 = tr.now()
+            handled = self._dispatch_scalar(qp, stage, reads, touch)
+            tr.complete(f"dispatch_run:{_op_name(op)}", t0, qp=qp.qp_num,
+                        run=1, handled=handled)
+            return handled
         processed = 0
         sq = qp.sq
         while sq:
@@ -284,11 +314,69 @@ class LoopbackTransport:
                             qp=qp.qp_num, run=len(run), handled=handled,
                             stacked_dmas=len(peer.ctx._dma_queue) - dmas0)
             for _ in range(handled):
-                qp._fc_retire(sq.popleft())  # reservation -> CQ occupancy
+                ps = sq.popleft()            # reservation -> CQ occupancy
+                if ps.fc_peer_cq is not None or ps.fc_self_cq is not None:
+                    qp._fc_retire(ps)
             processed += handled
             if handled < len(run):
                 break                       # RNR: SENDs stall in place
         return processed
+
+    def _wr_payload(self, qp, ps):
+        """The payload one posted SEND delivers — THE shared helper for
+        the scalar and vectorized paths (they must not drift): inline
+        rows unpack from the companion descriptor, everything else moves
+        by reference through `_move_payload`. Returns (payload, nbytes)
+        where nbytes is the inline byte count (0 for by-reference moves:
+        the wire bytes are the payload's own)."""
+        if ps.inline_row is not None:
+            return wqe.unpack_inline(ps.inline_row, ps.inline_nbytes,
+                                     ps.inline_dtype), ps.inline_nbytes
+        if ps.inline_src is not None:       # chain-built: row = block[j]
+            block, j = ps.inline_src
+            return wqe.unpack_inline(block[j], ps.inline_nbytes,
+                                     ps.inline_dtype), ps.inline_nbytes
+        return self._move_payload(qp, ps.wr), 0
+
+    @staticmethod
+    def _stage_recv_run(stage, cq, ids, lens, datas):
+        """Bulk-stage a run of SUCCESS recv CQEs: one `stage` call for
+        the head (get-or-create the CQ's column stage), then ONE column
+        extend for the rest — same columns in the same order as n
+        individual stage calls, without n closure dispatches. Only valid
+        on the vectorized path (stage returns the _CqStage)."""
+        st, _ = stage(cq, wqe.IBV_WC_RECV, ids[0], wqe.IBV_WC_SUCCESS,
+                      lens[0], datas[0])
+        k = len(ids) - 1
+        if k:
+            st.ops.extend([wqe.IBV_WC_RECV] * k)
+            st.ids.extend(ids[1:])
+            st.sts.extend([wqe.IBV_WC_SUCCESS] * k)
+            st.lens.extend(lens[1:])
+            st.datas.extend(datas[1:])
+
+    @staticmethod
+    def _batch_inline(run):
+        """One batched unpack for a homogeneous inline SEND run: when
+        every claimed WR's inline row sits at consecutive positions of
+        ONE chain-pack block (how `_build_wqe_chain` stages them), the
+        run's payloads are a single slice+byte-view of that block —
+        zero per-WR byte roundtrips, delivered rows are views. Returns
+        the (k, m) payload block, or None for mixed / non-inline runs
+        (those take the per-WR `_wr_payload` path)."""
+        first = run[0]
+        src = first.inline_src
+        if src is None:
+            return None
+        block, j0 = src
+        nb, dc = first.inline_nbytes, first.inline_dtype
+        for pos in range(1, len(run)):
+            ps = run[pos]
+            s = ps.inline_src
+            if s is None or s[0] is not block or s[1] != j0 + pos \
+                    or ps.inline_nbytes != nb or ps.inline_dtype != dc:
+                return None
+        return wqe.unpack_inline_batch(block[j0:j0 + len(run)], nb, dc)
 
     def _run_custom(self, qp, peer, ps, stage) -> int:
         # escape hatch: dispatch into the peer's offload engine
@@ -340,18 +428,36 @@ class LoopbackTransport:
             for _ in range(staged[0]):
                 qp._fc_retire(qp.sq.popleft())
 
+        claimed = run[:len(rwrs)] if len(rwrs) < n else run
+        rows = self._batch_inline(claimed) if len(rwrs) > 1 else None
+        if rows is not None and all(rwr.mr is None for rwr in rwrs):
+            # pure sideband inline run (the serve/submit hot path):
+            # payloads are already unpacked and nothing between here and
+            # the CQE stage can fail, so stage straight off the block —
+            # no landed-tuple staging, no per-WR closure calls
+            sig = [ps for ps in claimed if ps.wr.signaled]
+            if not sig or qp.send_cq is not peer.recv_cq:
+                nb = claimed[0].inline_nbytes
+                k = len(rwrs)
+                self._stage_recv_run(stage, peer.recv_cq,
+                                     [rwr.wr_id for rwr in rwrs],
+                                     [nb] * k, rows)
+                for ps in sig:
+                    stage(qp.send_cq, wqe.IBV_WR_SEND, ps.wr.wr_id,
+                          wqe.IBV_WC_SUCCESS, ps.inline_nbytes)
+                staged[0] = k
+                return k
+        has_mr = False
         try:
-            for ps, rwr in zip(run, rwrs):
-                wr = ps.wr
-                if ps.inline_row is not None:
-                    payload = wqe.unpack_inline(
-                        ps.inline_row, ps.inline_nbytes, ps.inline_dtype)
+            for pos, (ps, rwr) in enumerate(zip(run, rwrs)):
+                if rows is not None:
+                    payload = rows[pos]
                     nbytes = ps.inline_nbytes
                 else:
-                    payload = self._move_payload(qp, wr)
-                    nbytes = 0
+                    payload, nbytes = self._wr_payload(qp, ps)
                 off = buf = None
                 if rwr.mr is not None:
+                    has_mr = True
                     # ALL landing validation happens here in the fallible
                     # phase — offsets normalized, payload reshaped
                     # (`_as_records` so a bad payload fails exactly like
@@ -366,18 +472,21 @@ class LoopbackTransport:
             # then release the claims — even if that delivery itself
             # fails
             try:
-                self._land_sends(qp, peer, landed, stage, touch, staged)
+                self._land_sends(qp, peer, landed, stage, touch, staged,
+                                 has_mr)
             finally:
                 release_claims()
             raise
         try:
-            self._land_sends(qp, peer, landed, stage, touch, staged)
+            self._land_sends(qp, peer, landed, stage, touch, staged,
+                             has_mr)
         except BaseException:
             release_claims()
             raise
         return len(rwrs)
 
-    def _land_sends(self, qp, peer, landed, stage, touch, staged):
+    def _land_sends(self, qp, peer, landed, stage, touch, staged,
+                    has_mr=None):
         """Deliver a prepared SEND run: stack contiguous landings into
         one posted MR into ONE `submit_dma` (duplicate offsets retire
         last-writer-wins, like sequential landings). A broadcasting
@@ -390,10 +499,29 @@ class LoopbackTransport:
         WRs un-staged and un-retired (`staged[0]` counts delivered
         landings for the caller's claim accounting) — queued for retry,
         never completed-but-not-landed."""
-        if not any(rwr.mr is not None for _, rwr, *_ in landed):
+        if has_mr is None:
+            has_mr = any(rwr.mr is not None for _, rwr, *_ in landed)
+        if not has_mr:
             # no MR landings (the serve/submit hot path: sideband-only
             # deliveries): nothing can fail at submit time, stage
             # directly without the stacking/pending machinery
+            sig = [(t[0], t[5]) for t in landed if t[0].wr.signaled]
+            if len(landed) > 1 and (not sig
+                                    or qp.send_cq is not peer.recv_cq):
+                # bulk-stage the run's recv CQEs: ONE column extend per
+                # run instead of a closure call per WR. Send-CQ CQEs for
+                # signaled WRs follow the run; when both would land in
+                # the SAME CQ the per-WR loop below keeps the oracle's
+                # recv/send interleaving instead.
+                self._stage_recv_run(stage, peer.recv_cq,
+                                     [t[1].wr_id for t in landed],
+                                     [t[5] for t in landed],
+                                     [t[2] for t in landed])
+                for ps, nbytes in sig:
+                    stage(qp.send_cq, wqe.IBV_WR_SEND, ps.wr.wr_id,
+                          wqe.IBV_WC_SUCCESS, nbytes)
+                staged[0] += len(landed)
+                return
             for ps, rwr, payload, off, buf, nbytes in landed:
                 stage(peer.recv_cq, wqe.IBV_WC_RECV, rwr.wr_id,
                       wqe.IBV_WC_SUCCESS, nbytes, payload)
@@ -573,13 +701,7 @@ class LoopbackTransport:
                     rwr = peer.rq.popleft() if peer.rq else None
                 if rwr is None:
                     break       # RNR: leave this and later SENDs queued
-                if ps.inline_row is not None:
-                    payload = wqe.unpack_inline(
-                        ps.inline_row, ps.inline_nbytes, ps.inline_dtype)
-                    nbytes = ps.inline_nbytes
-                else:
-                    payload = self._move_payload(qp, wr)
-                    nbytes = 0
+                payload, nbytes = self._wr_payload(qp, ps)
                 delivered = payload
                 if rwr.mr is not None:
                     peer.ctx.submit_dma(

@@ -96,47 +96,149 @@ def unpack_inline(row: np.ndarray, nbytes: int, dtype_code: int) -> np.ndarray:
     return np.frombuffer(raw.tobytes(), dtype).copy()
 
 
+def pack_inline_batch(payloads) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched `pack_inline`: one (n, DESCRIPTOR_WIDTH) block of inline
+    companion rows for n payloads, with row i bit-identical to
+    pack_inline(payloads[i]).
+
+    A homogeneous run (same dtype and shape — every chain the benches and
+    serve paths build) packs with ONE stack + ONE byte-view copy instead of
+    n tobytes/frombuffer roundtrips; ragged or mixed runs fall back to the
+    per-element pack (and raise exactly where it would).
+
+    Returns (rows, nbytes, dtype_codes) with the latter two as n-vectors.
+    """
+    n = len(payloads)
+    arrs = [p if isinstance(p, np.ndarray) else np.asarray(p)
+            for p in payloads]
+    a0 = arrs[0]
+    if n > 1 and all(a is a0 for a in arrs):
+        # one payload OBJECT posted n times (RPC fan-out, the send
+        # benches): pack once, hand out a zero-copy broadcast view —
+        # rows are read-only but delivery never writes them
+        row, nb, dc = pack_inline(a0)
+        return (np.broadcast_to(row, (n, DESCRIPTOR_WIDTH)),
+                np.full(n, nb, np.int64), np.full(n, dc, np.int64))
+    d0, s0 = a0.dtype, a0.shape
+    if (d0 in _DTYPE_CODES and a0.nbytes <= INLINE_MAX_BYTES
+            and all(a.dtype == d0 and a.shape == s0 for a in arrs[1:])):
+        block = np.ascontiguousarray(np.stack(arrs)).reshape(n, -1)
+        raw = np.zeros((n, INLINE_MAX_BYTES), np.uint8)
+        raw[:, :a0.nbytes] = block.view(np.uint8)
+        return (raw.view(np.int64),
+                np.full(n, a0.nbytes, np.int64),
+                np.full(n, _DTYPE_CODES[d0], np.int64))
+    rows = np.empty((n, DESCRIPTOR_WIDTH), np.int64)
+    nbytes = np.empty(n, np.int64)
+    dcodes = np.empty(n, np.int64)
+    for i, a in enumerate(arrs):
+        rows[i], nbytes[i], dcodes[i] = pack_inline(a)
+    return rows, nbytes, dcodes
+
+
+def unpack_inline_batch(rows: np.ndarray, nbytes: int,
+                        dtype_code: int) -> np.ndarray:
+    """Batched `unpack_inline` for a homogeneous inline run: (k, W) rows →
+    one (k, nbytes/itemsize) payload block in a single byte-view pass.
+    Row i is bit-identical to unpack_inline(rows[i], nbytes, dtype_code);
+    delivery hands out the block's rows as zero-copy views."""
+    dtype = _CODE_DTYPES[dtype_code]
+    raw = np.ascontiguousarray(rows, np.int64).view(np.uint8)[:, :nbytes]
+    return np.ascontiguousarray(raw).view(dtype)
+
+
+def _wire_dtype(xp):
+    """Descriptor word dtype on the `xp` namespace. Host descriptors are
+    int64 cachelines; under the repo's x64=off pin a traced int64 would
+    canonicalize (with a warning) to int32 anyway, so traced codecs use
+    int32 words explicitly — full-width descriptors cross the device
+    boundary as int32 pairs instead (see kernels/desc_ring)."""
+    return np.int64 if xp is np else xp.int32
+
+
 def encode_wqe_batch(opcodes, *, wr_ids=0, rkeys=0, lkeys=0,
                      remote_offsets=0, lengths=0, flags=WQE_F_SIGNALED,
-                     dtype_codes=0) -> np.ndarray:
+                     dtype_codes=0, xp=np):
     """Vectorized `encode_wqe`: every argument is a scalar or an
     n-vector; returns an (n, DESCRIPTOR_WIDTH) chain built in one shot.
     Row i is bit-identical to encode_wqe(field_i, ...) — the N-WR chain
-    costs one numpy pass instead of N descriptor constructions."""
-    opcodes = np.asarray(opcodes, np.int64).ravel()
+    costs one array pass instead of N descriptor constructions.
+
+    Pure array ops on the `xp` namespace (numpy by default): pass xp=jnp
+    and the encode traces under jit for the device-resident publish path.
+    """
+    if xp is np:
+        # host fast path: one zeroed block + broadcasting column stores
+        # (broadcast_to + stack costs ~20x more per call at small n, and
+        # CQE publication runs this once per flush)
+        opcodes = np.asarray(opcodes, np.int64).ravel()
+        out = np.zeros((opcodes.shape[0], DESCRIPTOR_WIDTH), np.int64)
+        out[:, W_OPCODE] = opcodes
+        out[:, W_SRC] = wr_ids
+        out[:, W_DST] = rkeys
+        out[:, W_OFFSET] = remote_offsets
+        out[:, W_LENGTH] = lengths
+        out[:, W_TAG] = lkeys
+        out[:, W_FLAGS] = np.asarray(flags, np.int64) \
+            | (np.asarray(dtype_codes, np.int64) << 8)
+        return out
+    dt = _wire_dtype(xp)
+    opcodes = xp.asarray(opcodes, dt).ravel()
     n = opcodes.shape[0]
-    out = np.zeros((n, DESCRIPTOR_WIDTH), np.int64)
-    out[:, W_OPCODE] = opcodes
-    out[:, W_SRC] = np.asarray(wr_ids, np.int64)
-    out[:, W_DST] = np.asarray(rkeys, np.int64)
-    out[:, W_OFFSET] = np.asarray(remote_offsets, np.int64)
-    out[:, W_LENGTH] = np.asarray(lengths, np.int64)
-    out[:, W_TAG] = np.asarray(lkeys, np.int64)
-    out[:, W_FLAGS] = (np.asarray(flags, np.int64)
-                       | (np.asarray(dtype_codes, np.int64) << 8))
-    return out
+
+    def col(v):
+        return xp.broadcast_to(xp.asarray(v, dt), (n,))
+
+    cols = [col(0)] * DESCRIPTOR_WIDTH
+    cols[W_OPCODE] = opcodes
+    cols[W_SRC] = col(wr_ids)
+    cols[W_DST] = col(rkeys)
+    cols[W_OFFSET] = col(remote_offsets)
+    cols[W_LENGTH] = col(lengths)
+    cols[W_TAG] = col(lkeys)
+    cols[W_FLAGS] = col(flags) | (col(dtype_codes) << 8)
+    return xp.stack(cols, axis=1)
 
 
 def encode_cqe_batch(opcodes, wr_ids, statuses, lengths, flags=0,
-                     dtype_codes=0) -> np.ndarray:
+                     dtype_codes=0, xp=np):
     """Vectorized `encode_cqe`: one (n, DESCRIPTOR_WIDTH) CQE block per
-    completion batch (the transport publishes per-CQ in ONE encode+push)."""
-    opcodes = np.asarray(opcodes, np.int64).ravel()
+    completion batch (the transport publishes per-CQ in ONE encode+push).
+    Like encode_wqe_batch, jit-traceable with xp=jnp."""
+    if xp is np:
+        opcodes = np.asarray(opcodes, np.int64).ravel()
+        out = np.zeros((opcodes.shape[0], DESCRIPTOR_WIDTH), np.int64)
+        out[:, W_OPCODE] = opcodes
+        out[:, W_SRC] = wr_ids
+        out[:, W_DST] = statuses
+        out[:, W_LENGTH] = lengths
+        out[:, W_FLAGS] = np.asarray(flags, np.int64) \
+            | (np.asarray(dtype_codes, np.int64) << 8)
+        return out
+    dt = _wire_dtype(xp)
+    opcodes = xp.asarray(opcodes, dt).ravel()
     n = opcodes.shape[0]
-    out = np.zeros((n, DESCRIPTOR_WIDTH), np.int64)
-    out[:, W_OPCODE] = opcodes
-    out[:, W_SRC] = np.asarray(wr_ids, np.int64)
-    out[:, W_DST] = np.asarray(statuses, np.int64)
-    out[:, W_LENGTH] = np.asarray(lengths, np.int64)
-    out[:, W_FLAGS] = (np.asarray(flags, np.int64)
-                       | (np.asarray(dtype_codes, np.int64) << 8))
-    return out
+
+    def col(v):
+        return xp.broadcast_to(xp.asarray(v, dt), (n,))
+
+    cols = [col(0)] * DESCRIPTOR_WIDTH
+    cols[W_OPCODE] = opcodes
+    cols[W_SRC] = col(wr_ids)
+    cols[W_DST] = col(statuses)
+    cols[W_LENGTH] = col(lengths)
+    cols[W_FLAGS] = col(flags) | (col(dtype_codes) << 8)
+    return xp.stack(cols, axis=1)
 
 
-def decode_cqe_batch(descs: np.ndarray) -> dict:
+def decode_cqe_batch(descs, xp=np) -> dict:
     """Vectorized `cqe_fields`: decode a (k, DESCRIPTOR_WIDTH) block into
-    column vectors in one pass (poll_cq's array-at-a-time consumer)."""
-    descs = np.atleast_2d(np.asarray(descs, np.int64))
+    column vectors in one pass (poll_cq's array-at-a-time consumer).
+    Traceable with xp=jnp — column reads and masks are pure array ops."""
+    if xp is np:
+        descs = np.atleast_2d(np.asarray(descs, np.int64))
+    else:
+        descs = xp.atleast_2d(xp.asarray(descs))
     flags = descs[:, W_FLAGS]
     return dict(opcode=descs[:, W_OPCODE], wr_id=descs[:, W_SRC],
                 status=descs[:, W_DST], length=descs[:, W_LENGTH],

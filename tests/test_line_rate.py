@@ -106,8 +106,8 @@ def test_doorbell_queue_empty_batch_is_noop():
 
 
 # -- dispatch: run-grouped vs element-at-a-time ------------------------------
-_KINDS = ["send_inline", "send_big", "send_unsig", "write", "write_bad",
-          "read"]
+_KINDS = ["send_inline", "send_f64", "send_u8", "send_big", "send_unsig",
+          "send_mr", "write", "write_bad", "read"]
 
 
 def _run_chain(kinds, n_recv, use_srq, vectorized):
@@ -119,6 +119,8 @@ def _run_chain(kinds, n_recv, use_srq, vectorized):
     pair = verbs.VerbsPair(depth=1024, publish_every=8, srq=srq,
                            vectorized=vectorized)
     dst = pair.pd.reg_mr("dst", np.zeros((8, 4), np.float32))
+    src = pair.pd.reg_mr("src", np.arange(32, dtype=np.float32)
+                         .reshape(8, 4))
     rng = np.random.default_rng(len(kinds) * 101 + n_recv)
     recvs = [verbs.RecvWR(wr_id=100 + i) for i in range(n_recv)]
     if use_srq:
@@ -131,6 +133,17 @@ def _run_chain(kinds, n_recv, use_srq, vectorized):
         if kind == "send_inline":
             wrs.append(verbs.SendWR(wr_id=i, payload=np.array(
                 [i, 7, i * i], np.int32)))
+        elif kind == "send_f64":
+            wrs.append(verbs.SendWR(wr_id=i, payload=np.array(
+                [i + 0.5, -i], np.float64)))
+        elif kind == "send_u8":
+            wrs.append(verbs.SendWR(wr_id=i, payload=np.arange(
+                1 + i % 7, dtype=np.uint8)))
+        elif kind == "send_mr":
+            k = int(rng.integers(1, 4))
+            wrs.append(verbs.SendWR(
+                wr_id=i, payload=None, mr=src,
+                offsets=rng.choice(8, size=k, replace=False)))
         elif kind == "send_big":
             wrs.append(verbs.SendWR(wr_id=i, inline=False, payload=rng
                        .standard_normal(40).astype(np.float32)))
