@@ -1,0 +1,121 @@
+"""ISSUE 8 tentpole proof — the unreliable fabric.
+
+Three counter-based contracts (all deterministic: the fault schedules
+are seeded hashes of the packet identity, so the registry block in
+BENCH_fault.json is bit-stable run to run):
+
+  * fault_loss_replay: a lossy link (drop/delay/dup) under a finite
+    transport retry budget — every surviving WR is delivered bit-exact
+    (corruptions MUST stay 0), losses retire as error CQEs, and the
+    injection counters record the schedule;
+  * fault_rate_control: the DCQCN-flavored controller overdriven past
+    its ECN watermark — marks fire, the rate backs off multiplicatively,
+    pacing still delivers the whole burst, and drained flushes recover
+    the rate to line rate (converged=1);
+  * fault_failover: a KV transfer whose decode node is killed
+    mid-transfer — the engine re-resolves to the surviving listener and
+    replays; the delivered tree must match bit-exact (corruptions=0).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import verbs
+from repro.obs import metrics
+
+N_WRS = 256
+
+
+def _bench_loss_replay():
+    fm = verbs.FaultModel(seed=42, drop=0.2, delay=0.1, dup=0.05)
+    f = verbs.Fabric(pods=2, faults=fm, retry_cnt=7)
+    ep = f.connect(f.node("pod1/dev0").listen(depth=1024, max_wr=512,
+                                              srq=None),
+                   depth=1024, max_wr=512)
+    for i in range(N_WRS):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=1000 + i))
+    ep.post_send([verbs.SendWR(wr_id=i, payload=np.array(
+        [i, 3 * i, i * i], np.int64)) for i in range(N_WRS)])
+    t0 = time.perf_counter_ns()
+    ep.flush()
+    us = (time.perf_counter_ns() - t0) / 1e3
+    sends = {w.wr_id: w.status for w in ep.poll()}
+    recvs = [np.asarray(w.data) for w in ep.peer.recv_cq.poll()]
+    delivered = len(recvs)
+    corruptions = sum(
+        1 for r in recvs
+        if not np.array_equal(r, [int(r[0]), 3 * int(r[0]),
+                                  int(r[0]) ** 2]))
+    errors = sum(s != verbs.IBV_WC_SUCCESS for s in sends.values())
+    assert delivered + errors == N_WRS
+    return [(f"fault_loss_replay_{N_WRS}wr", us / N_WRS,
+             f"delivered={delivered};errors={errors};"
+             f"corruptions={corruptions};drops={fm.drops_injected};"
+             f"delays={fm.delays_injected};dups={fm.duplicates_absorbed};"
+             f"exhausted={fm.retry_exhausted};"
+             f"wrs_per_s={N_WRS / us * 1e6:.0f}")]
+
+
+def _bench_rate_control():
+    f = verbs.Fabric(pods=2, rate_control=dict(
+        line_rate=32, ecn_watermark=16, min_rate=1.0, ai_increment=8.0))
+    ep = f.connect(f.node("pod1/dev0").listen(depth=1024, max_wr=512,
+                                              srq=None),
+                   depth=1024, max_wr=512)
+    for i in range(N_WRS):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=1000 + i))
+    ep.post_send([verbs.SendWR(wr_id=i, payload=np.array([i], np.int64),
+                               signaled=False) for i in range(N_WRS)])
+    t0 = time.perf_counter_ns()
+    ep.flush()
+    us = (time.perf_counter_ns() - t0) / 1e3
+    delivered = len(ep.peer.recv_cq.poll())
+    for _ in range(32):                 # drained flushes: AI recovery
+        f.process_many([ep.qp])
+    snap = metrics.get_registry().snapshot()
+    route = f"{metrics.scope_of(f).path}/route:pod0/dev0->pod1/dev0"
+    converged = int(snap[f"{route}/current_rate"] == 32.0)
+    return [(f"fault_rate_control_{N_WRS}wr", us / N_WRS,
+             f"delivered={delivered};ecn_marks={snap[route + '/ecn_marks']};"
+             f"rate_decreases={snap[route + '/rate_decreases']};"
+             f"throttled={snap[route + '/throttled_wrs']};"
+             f"pacing_rounds={f.ratectl.pacing_rounds};"
+             f"converged={converged};"
+             f"wrs_per_s={N_WRS / us * 1e6:.0f}")]
+
+
+def _bench_failover():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config, reduced
+    from repro.core.kvtransfer import KVTransferEngine
+    from repro.models.registry import build_model
+
+    cfg = reduced(get_config("gemma-2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    _, caches = model.prefill(params, jnp.ones((2, 8), jnp.int32))
+    fm = verbs.FaultModel(seed=7)
+    f = verbs.Fabric(pods=3, faults=fm)
+    eng = KVTransferEngine(model, 2, 8, fabric=f)
+    eng.transfer(caches)                        # clean transfer first
+    fm.kill_after(eng._listen_addrs[eng._active].gid, 1)
+    t0 = time.perf_counter_ns()
+    out = eng.transfer(caches)                  # killed mid-transfer
+    us = (time.perf_counter_ns() - t0) / 1e3
+    corruptions = sum(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(caches)))
+    return [("fault_failover_kv_transfer", us,
+             f"replays={eng.transfers_replayed};"
+             f"reresolutions={eng.route_reresolutions};"
+             f"corruptions={corruptions};disconnects={f.disconnects};"
+             f"nodes_killed={f.nodes_killed}")]
+
+
+def run():
+    return (_bench_loss_replay() + _bench_rate_control()
+            + _bench_failover())

@@ -41,6 +41,13 @@ HEADLINES = {
     "srq": {"desc_dmas_per_wr": "lower", "overruns": "lower"},
     "fabric": {"desc_dmas_per_wr": "lower", "launches_per_wr": "lower",
                "wrs_per_s": "higher"},
+    # ISSUE 8: zero payload corruptions under loss/failover is a hard
+    # gate (baseline 0 + "lower" tolerates only 0); replay/re-resolution
+    # and rate-controller convergence must keep happening.
+    "fault": {"corruptions": "lower", "delivered": "higher",
+              "errors": "lower", "replays": "higher",
+              "reresolutions": "higher", "ecn_marks": "higher",
+              "converged": "higher", "wrs_per_s": "higher"},
 }
 # speedup_vs_scalar is a ratio of two wall clocks: steadier than either
 # alone, but still rig weather — warn at 20%, fail at 50% like wrs_per_s

@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.bench_line_rate",      # ISSUE 3: batch-wise dispatch chains
     "benchmarks.bench_fabric",         # ISSUE 5: routed multi-pod fabric
     "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
+    "benchmarks.bench_fault",          # ISSUE 8: unreliable fabric
 ]
 
 

@@ -24,6 +24,7 @@ import numpy as np
 from repro import verbs
 from repro.core.descriptors import TransferPlan
 from repro.core import tx_engine
+from repro.obs import metrics
 
 
 @dataclass
@@ -50,14 +51,31 @@ class KVTransferEngine:
     """Moves a model's decode cache across the `pod` axis through the
     verbs fabric: the prefill pod's CM connects to the decode pod's
     listener (`fabric.connect` — no manual QP bring-up) and each
-    transfer is one SEND on the routed RC connection."""
+    transfer is one SEND on the routed RC connection.
+
+    Failover: the engine listens on EVERY decode-capable gid (each pod
+    except the prefill pod's) and `transfer()` is replayed end to end
+    when the connected decode node dies mid-transfer — peer death
+    arrives as a CM disconnect *event* (`connect(on_disconnect=...)`),
+    the route re-resolves to a surviving listener, and the SEND is
+    re-posted on the fresh connection. The delivered payload is the
+    replayed one, bit-exact; `route_reresolutions`/`transfers_replayed`
+    registry counters (``kvtransfer{i}/...``) prove what happened."""
+
+    transfers_replayed = metrics.counter_attr()
+    route_reresolutions = metrics.counter_attr()
 
     def __init__(self, model, batch: int, seq_len: int,
                  plan: TransferPlan | None = None, *,
-                 vectorized: bool = True, fabric=None):
+                 vectorized: bool = True, fabric=None,
+                 replay_limit: int = 3):
+        metrics.instance_scope(self, "kvtransfer", indexed=True)
         self.model = model
         self.plan = plan or TransferPlan()
         self.spec_tree = model.cache_specs(batch, seq_len)
+        self.replay_limit = replay_limit
+        self.transfers_replayed = 0
+        self.route_reresolutions = 0
         # decode-side landing buffers come from the FABRIC-scope shared
         # pool (one SRQ + one watermark for every tenant on the fabric)
         # and the prefill sender runs under CQ-credit flow control: a
@@ -69,7 +87,6 @@ class KVTransferEngine:
         self.fabric = fabric if fabric is not None else verbs.Fabric(
             pods=2, plan=self.plan, vectorized=vectorized)
         self.srq = self.fabric.shared_srq(max_wr=256)
-        decode_cm = self.fabric.node(self.fabric.gids[-1])
         if fabric is not None and self.fabric.pods < 2:
             # the wire bypass is decided by POD equality (the fabric
             # lowers spec_tree SENDs onto tx_engine only across pods):
@@ -81,33 +98,116 @@ class KVTransferEngine:
                 "are intra-pod (by reference); the tx_engine wire "
                 "(and transfer_staged's baseline) is bypassed",
                 stacklevel=2)
-        self._listen_addr = decode_cm.listen(depth=256, srq="fabric",
-                                             flow_control=True)
-        self.ep = self.fabric.connect(self._listen_addr,
-                                      src_gid=self.fabric.gids[0],
-                                      depth=256, flow_control=True)
-        self.ring = self.ep.peer.recv_cq.ring   # the header path (T3)
+        # decode listeners: the primary on the LAST gid (the historical
+        # decode pod) plus a standby on every other decode-capable gid
+        # (pods other than the prefill pod's) — the failover targets
+        self._prefill_gid = self.fabric.gids[0]
+        prefill_pod = self._prefill_gid.split("/", 1)[0]
+        decode_gids = [g for g in self.fabric.gids
+                       if g.split("/", 1)[0] != prefill_pod]
+        if not decode_gids:                 # single-pod fabric (warned)
+            decode_gids = [self.fabric.gids[-1]]
+        self._listen_addrs = [
+            self.fabric.node(g).listen(depth=256, srq="fabric",
+                                       flow_control=True)
+            for g in decode_gids]
+        self._peer_lost = False
+        self._connect_to(len(self._listen_addrs) - 1)
         self.stats = TransferStats()
         self._wr_id = 0
 
+    def _connect_to(self, idx: int):
+        """Establish (or re-establish) the transfer connection against
+        the decode listener at `idx`; peer death on it raises the
+        `_peer_lost` flag via the CM disconnect event."""
+        addr = self._listen_addrs[idx]
+
+        def lost(_ep):
+            self._peer_lost = True
+        self.ep = self.fabric.connect(addr, src_gid=self._prefill_gid,
+                                      depth=256, flow_control=True,
+                                      on_disconnect=lost)
+        self._peer_lost = False
+        self._active = idx
+        self.ring = self.ep.peer.recv_cq.ring   # the header path (T3)
+
+    def _failover(self):
+        """Re-resolve the route to a surviving decode listener and
+        reconnect. The dead connection's surviving (prefill) QP is torn
+        down here; the dead node's side is already gone."""
+        old = self.ep
+        survivors = [i for i, a in enumerate(self._listen_addrs)
+                     if self.fabric.alive(a.gid)
+                     and a.qpn in self.fabric._listeners]
+        if not survivors:
+            raise verbs.QPStateError(
+                "KV transfer failover: no surviving decode listener")
+        self.fabric.routes.pop(old.qp.qp_num, None)
+        self.fabric.gid_of.pop(old.qp.qp_num, None)
+        self.fabric.endpoints.pop(old.qp.qp_num, None)
+        old.qp.destroy()
+        self.route_reresolutions += 1
+        self._connect_to(survivors[-1])
+
     def close(self):
-        """Release every fabric registration this engine holds (listener,
-        both QPs, routes, SRQ membership): a long-lived shared fabric
-        must not grow state per short-lived engine."""
-        self.fabric.unlisten(self._listen_addr)
-        self.fabric.disconnect(self.ep)
+        """Release every fabric registration this engine holds
+        (listeners, both QPs, routes, SRQ membership): a long-lived
+        shared fabric must not grow state per short-lived engine."""
+        for addr in self._listen_addrs:
+            if addr.qpn in self.fabric._listeners:
+                self.fabric.unlisten(addr)
+        if self.ep.qp.qp_num in self.fabric.qps:
+            self.fabric.disconnect(self.ep)
         return self
+
+    def _send_once(self, caches, staged: bool):
+        """One transfer attempt on the current connection. Returns
+        ``(delivered, ok)``; not-ok means the decode peer died (before,
+        or — via the kill-mid-flush fault trigger — during the SEND) and
+        the caller should fail over and replay."""
+        if self._peer_lost:
+            return None, False
+        pool = self.ep.peer.qp.srq
+        self._wr_id += 1
+        try:
+            if pool is not None and len(pool) < 1:
+                pool.post_recv([verbs.RecvWR(wr_id=self._wr_id)])
+            self.ep.post_send(verbs.SendWR(
+                wr_id=self._wr_id, payload=caches,
+                spec_tree=self.spec_tree, inline=False))
+            self.ep.flush()
+        except verbs.QPStateError:
+            return None, False              # peer (or connection) gone
+        if self._peer_lost:
+            # the kill landed mid-flush: our in-flight WR drained as
+            # WR_FLUSH_ERR (visible on the send CQ) — nothing delivered
+            self.ep.poll()
+            return None, False
+        for wc in self.ep.poll():           # retire the send completion
+            if not wc.ok:
+                return None, False
+        wcs = self.ep.peer.recv_cq.poll()
+        if not wcs:
+            return None, False
+        assert wcs[-1].ok, \
+            f"transfer completion status {wcs[-1].status}"
+        return wcs[-1].data, True
 
     def _send(self, caches, staged: bool):
         self.stats = account(caches, self.plan)
         self.fabric.plan = self.plan
         self.fabric.staged = staged
-        self._wr_id += 1
-        wc = self.ep.send(caches, wr_id=self._wr_id,
-                          spec_tree=self.spec_tree, inline=False)
-        assert wc.ok, f"transfer completion status {wc.status}"
-        self.ep.poll()                      # retire the send completion
-        return wc.data
+        data, ok = self._send_once(caches, staged)
+        replays = 0
+        while not ok:
+            if replays >= self.replay_limit:
+                raise verbs.QPStateError(
+                    f"KV transfer failed after {replays} replays")
+            self._failover()
+            self.transfers_replayed += 1
+            replays += 1
+            data, ok = self._send_once(caches, staged)
+        return data
 
     def transfer(self, caches):
         """FlexiNS path: headers on the CQ ring, payload via striped

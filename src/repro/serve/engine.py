@@ -36,10 +36,12 @@ class Request:
 
 class ServeEngine:
     # per-tenant telemetry (`serve{i}/...` in the registry): requests
-    # posted through the verbs client side, and pool refills the SRQ
-    # watermark doorbell triggered
+    # posted through the verbs client side, pool refills the SRQ
+    # watermark doorbell triggered, and connected clients the fabric
+    # reported dead (the listener's CM DISCONNECTED event)
     requests_submitted = metrics.counter_attr()
     srq_refills = metrics.counter_attr()
+    client_disconnects = metrics.counter_attr()
 
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_seq: int = 256, ring_capacity: int = 64,
@@ -47,6 +49,7 @@ class ServeEngine:
         metrics.instance_scope(self, "serve", indexed=True)
         self.requests_submitted = 0
         self.srq_refills = 0
+        self.client_disconnects = 0
         # levels are owned by engine state — sample, don't mirror
         metrics.weak_probe(self._metrics, "slots_active", self,
                            lambda e: sum(1 for s in e.slots
@@ -75,7 +78,8 @@ class ServeEngine:
         cm = self.fabric.node(self.fabric.gids[0])
         self._listen_addr = cm.listen(depth=ring_capacity,
                                       max_wr=max(256, 2 * max_batch),
-                                      srq="fabric")
+                                      srq="fabric",
+                                      on_disconnect=self._client_lost)
         self.ep = self.fabric.connect(self._listen_addr,
                                       src_gid=self.fabric.gids[0],
                                       depth=ring_capacity,
@@ -112,6 +116,12 @@ class ServeEngine:
         self._post_descriptor(make_descriptor(OP_KV_WRITE, src=rid,
                                               length=len(prompt)))
         return rid
+
+    def _client_lost(self, _ep):
+        """Listener-level CM DISCONNECTED event: a connected client's
+        node died (or hung up). In-flight requests from that client have
+        already drained as WR_FLUSH_ERR; here we only account."""
+        self.client_disconnects += 1
 
     def _refill_srq(self, srq):
         """SRQ limit event: top the shared pool back up to 2x batch and

@@ -15,6 +15,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.obs import metrics as obs
 from repro.train.checkpoint import Checkpointer
 
 
@@ -29,6 +30,14 @@ class StragglerMonitor:
     times: list = field(default_factory=list)
     flagged: list = field(default_factory=list)
 
+    # registry view (`straggler{i}/...`): the count lives beside the
+    # fabric/serve telemetry so one snapshot covers a whole failure run
+    stragglers_flagged = obs.counter_attr()
+
+    def __post_init__(self):
+        obs.instance_scope(self, "straggler", indexed=True)
+        self.stragglers_flagged = 0
+
     def observe(self, step: int, dt: float) -> bool:
         self.times.append(dt)
         hist = sorted(self.times[-self.window:])
@@ -36,6 +45,7 @@ class StragglerMonitor:
         slow = len(self.times) >= 5 and dt > self.factor * med
         if slow:
             self.flagged.append((step, dt, med))
+            self.stragglers_flagged += 1
         return slow
 
 
@@ -49,6 +59,21 @@ class TrainController:
     on_straggler: Optional[Callable] = None
     monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
 
+    # registry views (`train_controller{i}/...`)
+    restarts = obs.counter_attr()
+    checkpoints_saved = obs.counter_attr()
+    failures_injected = obs.counter_attr()
+
+    def __post_init__(self):
+        obs.instance_scope(self, "train_controller", indexed=True)
+        self.restarts = 0
+        self.checkpoints_saved = 0
+        self.failures_injected = 0
+
+    def _save(self, step, state):
+        self.ckpt.save(step, state)
+        self.checkpoints_saved += 1
+
     def run(self, state, start_step: int, num_steps: int,
             fail_at: Optional[int] = None, _resumed: bool = False):
         """Returns (final_state, last_step, history). ``fail_at`` injects a
@@ -58,6 +83,7 @@ class TrainController:
         try:
             while step < start_step + num_steps:
                 if fail_at is not None and step == fail_at and not _resumed:
+                    self.failures_injected += 1
                     raise SimulatedFailure(f"injected at step {step}")
                 t0 = time.monotonic()
                 state, metrics = self.step_fn(state, self.batch_fn(step))
@@ -67,17 +93,18 @@ class TrainController:
                 history.append((step, metrics))
                 step += 1
                 if step % self.checkpoint_every == 0:
-                    self.ckpt.save(step, state)
+                    self._save(step, state)
         except SimulatedFailure:
             self.ckpt.wait()
             restored_step = self.ckpt.latest_step()
             if restored_step is None:
                 raise
             _, state = self.ckpt.restore(state, restored_step)
+            self.restarts += 1
             remaining = (start_step + num_steps) - restored_step
             state, last, h2 = self.run(state, restored_step, remaining,
                                        fail_at=fail_at, _resumed=True)
             return state, last, history + h2
-        self.ckpt.save(step, state)
+        self._save(step, state)
         self.ckpt.wait()
         return state, step, history

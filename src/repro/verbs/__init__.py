@@ -12,26 +12,30 @@ See src/repro/verbs/README.md for the verbs <-> engine mapping table.
 from repro.verbs.cq import CompletionQueue, CQOverrunError, WorkCompletion
 from repro.verbs.fabric import (ConnectionManager, Fabric, FabricAddress,
                                 FabricEndpoint)
+from repro.verbs.faults import FaultModel
 from repro.verbs.pd import MemoryRegion, ProtectionDomain
 from repro.verbs.qp import (ENOMEMError, QPState, QPStateError, QueuePair,
                             RecvWR, SendWR)
+from repro.verbs.ratectl import RateController
 from repro.verbs.srq import SharedReceiveQueue
 from repro.verbs.transport import (LoopbackTransport, MeshTransport,
                                    VerbsPair, connect)
 from repro.verbs.wqe import (IBV_WC_ACCESS_ERR, IBV_WC_RECV, IBV_WC_RNR_ERR,
-                             IBV_WC_SUCCESS, IBV_WC_WR_FLUSH_ERR,
+                             IBV_WC_RETRY_EXC_ERR, IBV_WC_SUCCESS,
+                             IBV_WC_WR_FLUSH_ERR,
                              IBV_WR_RDMA_READ, IBV_WR_RDMA_WRITE,
                              IBV_WR_SEND, INLINE_MAX_BYTES)
 
 __all__ = [
     "CompletionQueue", "CQOverrunError", "WorkCompletion",
     "ConnectionManager", "Fabric", "FabricAddress", "FabricEndpoint",
+    "FaultModel", "RateController",
     "MemoryRegion", "ProtectionDomain",
     "ENOMEMError", "QPState", "QPStateError", "QueuePair", "RecvWR",
     "SendWR", "SharedReceiveQueue",
     "LoopbackTransport", "MeshTransport", "VerbsPair", "connect",
-    "IBV_WC_ACCESS_ERR", "IBV_WC_RECV", "IBV_WC_RNR_ERR", "IBV_WC_SUCCESS",
-    "IBV_WC_WR_FLUSH_ERR",
+    "IBV_WC_ACCESS_ERR", "IBV_WC_RECV", "IBV_WC_RNR_ERR",
+    "IBV_WC_RETRY_EXC_ERR", "IBV_WC_SUCCESS", "IBV_WC_WR_FLUSH_ERR",
     "IBV_WR_RDMA_READ", "IBV_WR_RDMA_WRITE", "IBV_WR_SEND",
     "INLINE_MAX_BYTES",
 ]

@@ -44,11 +44,38 @@ QP owns its ``rnr_retries`` / ``rnr_exhausted`` / ``rnr_backoff_units``
 registry counters (``fabric{k}/qp{n}/...`` once attached), and the
 fabric's same-named attributes are read-only sums over every QP it ever
 attached — two views of ONE counter, never double-booked.
+
+Unreliable-fabric semantics (see verbs/README.md "Fault model &
+failover" for the full contract):
+
+  * a `FaultModel` (``Fabric(..., faults=...)``, verbs/faults.py) makes
+    the wire lossy — seeded drop/delay/duplicate schedules on SENDs and
+    RNR NAKs. `_police` generalizes the RNR schedule to link faults:
+    drops spend the ``retry_cnt`` transport budget (exhaustion retires
+    ``IBV_WC_RETRY_EXC_ERR``), delays retransmit for free, duplicates
+    are absorbed by RC PSN tracking. Faulted WRs retire with an error
+    status or deliver exactly once — never a phantom SUCCESS;
+  * ``rate_control=True`` layers a DCQCN-flavored per-route rate
+    controller (verbs/ratectl.py) on the CQ-credit pool: each flush
+    drains in paced rounds, marks routes whose destination recv CQ
+    backlog crosses the ECN watermark, and adapts per-route rates
+    (``fabric0/route:<src>-><dst>/...`` in registry snapshots);
+  * peer death is an *event*, not a timeout: ``kill_node(gid)`` (or a
+    `FaultModel.kill_after` trigger mid-flush) destroys the node's QPs
+    and listeners, drains surviving senders' in-flight WRs as
+    ``IBV_WC_WR_FLUSH_ERR``, and fans ``on_disconnect`` callbacks out to
+    the endpoint (``connect(on_disconnect=...)``), the server's listener
+    (``listen(on_disconnect=...)``) and the node's ConnectionManager
+    (``cm.add_on_disconnect``) — tenants re-resolve and replay instead
+    of stalling on RNR backoff.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Any, Callable
+
+import jax
+import numpy as np
 
 from repro.core.descriptors import TransferPlan
 from repro.launch.mesh import make_fabric_mesh
@@ -57,6 +84,7 @@ from repro.verbs import wqe
 from repro.verbs.cq import CompletionQueue, CQOverrunError
 from repro.verbs.pd import ProtectionDomain
 from repro.verbs.qp import QPState, QPStateError, QueuePair, SendWR
+from repro.verbs.ratectl import RateController
 from repro.verbs.srq import SharedReceiveQueue
 from repro.verbs.transport import MeshTransport, two_sided_send
 
@@ -99,6 +127,7 @@ class _Listener:
     srq: SharedReceiveQueue | None
     flow_control: bool
     on_connect: Callable | None
+    on_disconnect: Callable | None = None
     accepted: list = field(default_factory=list)
 
 
@@ -120,6 +149,9 @@ class FabricEndpoint:
         self.listener = listener        # set on accepted (server) sides
         self.send_cq = qp.send_cq
         self.recv_cq = qp.recv_cq
+        # disconnect event (rdma-cm DISCONNECTED): fired by the fabric
+        # when the connected peer dies or hangs up — see _fire_disconnect
+        self.on_disconnect: Callable | None = None
 
     @property
     def address(self) -> FabricAddress:
@@ -205,16 +237,28 @@ class ConnectionManager:
         self.fabric = fabric
         self.gid = gid
         self.pd = pd or ProtectionDomain()
+        # CM-level disconnect fan-out: fired for every connection of this
+        # node that loses its peer (on top of per-endpoint/listener hooks)
+        self._disconnect_cbs: list[Callable] = []
+
+    def add_on_disconnect(self, cb: Callable) -> "ConnectionManager":
+        self._disconnect_cbs.append(cb)
+        return self
 
     def listen(self, service: str | None = None, *, depth: int = 512,
                publish_every: int = 8, max_wr: int = 256,
                srq: Any = "fabric", flow_control: bool = False,
-               on_connect: Callable | None = None) -> FabricAddress:
+               on_connect: Callable | None = None,
+               on_disconnect: Callable | None = None) -> FabricAddress:
         """Register a listener and return its address. Accepted QPs share
         one recv CQ, and — with ``srq="fabric"`` (the default) — draw
         their landing buffers from the fabric-scope pool. Pass an SRQ
-        instance for a private pool, or ``None`` for per-QP rq's."""
+        instance for a private pool, or ``None`` for per-QP rq's.
+        ``on_disconnect`` fires (with the accepted server endpoint) when
+        a client of this listener dies or hangs up."""
         fabric = self.fabric
+        if self.gid in fabric.dead_gids:
+            raise QPStateError(f"node {self.gid} is dead")
         if service is not None and service in fabric._services:
             raise QPStateError(f"service {service!r} already listening")
         addr = FabricAddress(self.gid, fabric._next_service_qpn)
@@ -223,7 +267,8 @@ class ConnectionManager:
         fabric._listeners[addr.qpn] = _Listener(
             self, service, addr,
             CompletionQueue(depth, publish_every, fabric.vectorized),
-            depth, publish_every, max_wr, pool, flow_control, on_connect)
+            depth, publish_every, max_wr, pool, flow_control, on_connect,
+            on_disconnect)
         if service is not None:
             fabric._services[service] = addr
         return addr
@@ -236,17 +281,23 @@ class ConnectionManager:
         return addr
 
     def connect(self, addr, *, depth: int = 512, publish_every: int = 8,
-                max_wr: int = 256,
-                flow_control: bool = False) -> FabricEndpoint:
+                max_wr: int = 256, flow_control: bool = False,
+                on_disconnect: Callable | None = None) -> FabricEndpoint:
         """rdma_connect: mint a client QP here, accept a server QP at
         `addr` (a listener address, a service name, or a bare addressed
         QP still in RESET) and drive BOTH through the RC ladder. The
         returned endpoint is ready to post — no state-machine calls left
-        to the client."""
+        to the client. ``on_disconnect`` fires (with this endpoint) when
+        the connected peer dies."""
         fabric = self.fabric
+        if self.gid in fabric.dead_gids:
+            raise QPStateError(f"node {self.gid} is dead")
         if isinstance(addr, str):
             addr = self.resolve(addr)
         addr = as_address(addr)
+        if addr.gid in fabric.dead_gids:
+            raise QPStateError(f"cannot connect to {addr}: node "
+                               f"{addr.gid} is dead")
         vec = fabric.vectorized
         # accept FIRST: a bad address must fail before the client QP is
         # minted (QueuePair.__init__ binds a T4 context on pd.engine —
@@ -269,8 +320,11 @@ class ConnectionManager:
                                                         qp.qp_num)
         ep = FabricEndpoint(fabric, qp, self.gid, remote=server.address,
                             peer=server)
+        ep.on_disconnect = on_disconnect
         server.remote = ep.address
         server.peer = ep
+        fabric.endpoints[qp.qp_num] = ep
+        fabric.endpoints[server.qp.qp_num] = server
         if listener is not None:
             listener.accepted.append(server)
             if listener.on_connect is not None:
@@ -288,6 +342,16 @@ class Fabric(MeshTransport):
 
     #: ibverbs sentinel: rnr_retry == 7 retries forever (RNR = stall)
     RNR_RETRY_INFINITE = 7
+    #: safety valve: max fault-injected retransmission ticks one flush
+    #: spends per QP (a delay-rate-1.0 schedule must not wedge a flush)
+    MAX_FAULT_TICKS = 256
+
+    # failure-domain telemetry (registry-backed, `fabric{k}/...`):
+    # disconnect events fired, nodes killed, and intra-pod device hops
+    # (the devices_per_pod > 1 routing path)
+    disconnects = metrics.counter_attr()
+    nodes_killed = metrics.counter_attr()
+    intra_pod_hops = metrics.counter_attr()
 
     def __init__(self, pods: int = 1, devices_per_pod: int = 1, *,
                  plan: TransferPlan | None = None, staged: bool = False,
@@ -295,7 +359,9 @@ class Fabric(MeshTransport):
                  rnr_timeout: int = 1,
                  on_rnr_backoff: Callable[[QueuePair, int], None] | None
                  = None,
-                 srq_max_wr: int = 512, srq_limit: int = 0):
+                 srq_max_wr: int = 512, srq_limit: int = 0,
+                 faults=None, retry_cnt: int = 7,
+                 rate_control: bool | dict = False):
         # the cross-pod payload wire (plan/staged/wire_sends) comes from
         # MeshTransport; _move_payload below gates it on the route
         super().__init__(plan, staged=staged, vectorized=vectorized)
@@ -312,6 +378,16 @@ class Fabric(MeshTransport):
         self._listeners: dict[int, _Listener] = {}
         self._services: dict[str, FabricAddress] = {}
         self._next_service_qpn = _SERVICE_QPN_BASE
+        # live CM-established connections by qp_num (both sides): the
+        # disconnect fan-out path from a dying peer to its tenants
+        self.endpoints: dict[int, FabricEndpoint] = {}
+        # failure domain: gids taken down by kill_node, and kills a
+        # FaultModel trigger armed mid-dispatch (executed post-pass)
+        self.dead_gids: set[str] = set()
+        self._pending_kills: list[str] = []
+        self.disconnects = 0
+        self.nodes_killed = 0
+        self.intra_pod_hops = 0
         # fabric-scope shared recv pool (lazy)
         self._srq: SharedReceiveQueue | None = None
         self.srq_max_wr = srq_max_wr
@@ -324,6 +400,37 @@ class Fabric(MeshTransport):
         self.rnr_timeout = rnr_timeout
         self.on_rnr_backoff = on_rnr_backoff
         self._rnr_sources: dict[int, tuple] = {}
+        # lossy-link policy: transport retry budget for dropped packets
+        # (ibverbs retry_cnt, 0..7 — always finite) and the FaultModel
+        # supplying the schedule (None = the lossless wire)
+        self.retry_cnt = retry_cnt
+        if faults is not None:
+            self.install_faults(faults)
+        # DCQCN-flavored per-route rate control (opt-in)
+        self.ratectl: RateController | None = None
+        if rate_control:
+            self.enable_rate_control(
+                **(rate_control if isinstance(rate_control, dict) else {}))
+
+    # -- fault / congestion policy -------------------------------------------
+    def install_faults(self, fm) -> "Fabric":
+        """Install a `FaultModel` as this fabric's link layer: its scope
+        re-homes under the fabric (``fabric{k}/faults{i}/...``) and every
+        attached QP gets a stable flow id (attach order — NOT qp_num, so
+        schedules reproduce across runs). Install at construction: WRs
+        posted before the model was installed carry no packet sequence
+        numbers."""
+        self.faults = fm
+        metrics.scope_of(fm).reparent(metrics.scope_of(self))
+        for qpn in self.qps:
+            fm.register(qpn)
+        return self
+
+    def enable_rate_control(self, **knobs) -> RateController:
+        """Attach the DCQCN-flavored `RateController` (verbs/ratectl.py);
+        knobs are its constructor's (line_rate, ecn_watermark, ...)."""
+        self.ratectl = RateController(self, **knobs)
+        return self.ratectl
 
     # -- telemetry -----------------------------------------------------------
     def attach(self, qp: QueuePair) -> QueuePair:
@@ -336,6 +443,8 @@ class Fabric(MeshTransport):
         self._rnr_sources[qp.qp_num] = tuple(
             sc.counter(leaf) for leaf in
             ("rnr_retries", "rnr_exhausted", "rnr_backoff_units"))
+        if self.faults is not None:
+            self.faults.register(qp.qp_num)
         return qp
 
     # One registry counter, two views (the RNR dedup): these sums read
@@ -423,17 +532,103 @@ class Fabric(MeshTransport):
         every fabric registration it holds (routes, gids, transport
         attachment, SRQ membership, listener accept list, T4 contexts) —
         a long-lived fabric must not accumulate state from short-lived
-        connections (one KVTransferEngine per transfer, say)."""
+        connections (one KVTransferEngine per transfer, say). The PASSIVE
+        side observes a DISCONNECTED event (rdma-cm semantics): its
+        disconnect callbacks fire; the initiator asked, so its don't."""
         for side in (ep, ep.peer):
             if side is None:
                 continue
             self.routes.pop(side.qp.qp_num, None)
             self.gid_of.pop(side.qp.qp_num, None)
+            self.endpoints.pop(side.qp.qp_num, None)
             if side.listener is not None and \
                     side in side.listener.accepted:
                 side.listener.accepted.remove(side)
             side.qp.destroy()       # ERR-flush + transport/SRQ/ctx release
+        if ep.peer is not None:
+            self._fire_disconnect(ep.peer)
         return self
+
+    # -- failure domain ------------------------------------------------------
+    def alive(self, gid: str) -> bool:
+        return gid in self.gids and gid not in self.dead_gids
+
+    def _fire_disconnect(self, ep: FabricEndpoint | None):
+        """Fan one connection's disconnect event out to every registered
+        observer: the endpoint's own hook, its listener's, and the
+        CM-level callbacks of the surviving node."""
+        self.disconnects += 1
+        if ep is None:
+            return
+        cbs: list[Callable] = []
+        if ep.on_disconnect is not None:
+            cbs.append(ep.on_disconnect)
+        if ep.listener is not None and \
+                ep.listener.on_disconnect is not None:
+            cbs.append(ep.listener.on_disconnect)
+        cm = self.nodes.get(ep.gid)
+        if cm is not None:
+            cbs.extend(cm._disconnect_cbs)
+        for cb in cbs:
+            cb(ep)
+
+    def kill_node(self, gid: str) -> "Fabric":
+        """Simulate the death of one fabric node (a pod device): its
+        listeners close, its QPs are destroyed, and every SURVIVOR
+        routed at it transitions to ERR — in-flight WRs drain as
+        ``IBV_WC_WR_FLUSH_ERR`` completions — with disconnect events
+        fanned out so tenants re-resolve instead of timing out. Safe to
+        call mid-flush only via the FaultModel kill trigger (which defers
+        to `_run_pending_kills` after the dispatch pass)."""
+        if gid not in self.gids:
+            raise QPStateError(f"gid {gid!r} is not on this fabric")
+        if gid in self.dead_gids:
+            return self
+        self.dead_gids.add(gid)
+        self.nodes_killed += 1
+        # listeners at the dead gid close: resolve()/connect() now find
+        # only survivors
+        for qpn, lst in list(self._listeners.items()):
+            if lst.addr.gid == gid:
+                self.unlisten(lst.addr)
+        # the node's own QPs die with it (no CQEs escape a dead node)
+        for qpn, g in list(self.gid_of.items()):
+            if g != gid:
+                continue
+            qp = self.qps.get(qpn)
+            self.routes.pop(qpn, None)
+            self.endpoints.pop(qpn, None)
+            self.gid_of.pop(qpn, None)
+            if qp is not None:
+                qp.destroy()
+        # survivors routed INTO the dead node observe peer death: the
+        # route drops, in-flight WRs flush with WR_FLUSH_ERR, and the
+        # disconnect event reaches the tenant
+        for qpn, route in list(self.routes.items()):
+            if route.gid != gid:
+                continue
+            self.routes.pop(qpn, None)
+            sqp = self.qps.get(qpn)
+            if sqp is not None and sqp.state == QPState.RTS:
+                sqp.modify(QPState.ERR)     # WRs drain as WR_FLUSH_ERR
+            self._fire_disconnect(self.endpoints.pop(qpn, None))
+        return self
+
+    def kill_pod(self, pod: str) -> "Fabric":
+        """Kill every device of one pod (``kill_pod("pod1")``)."""
+        for gid in [g for g in self.gids
+                    if g.split("/", 1)[0] == pod and g not in
+                    self.dead_gids]:
+            self.kill_node(gid)
+        return self
+
+    def _run_pending_kills(self):
+        """Execute kills a FaultModel trigger armed during the dispatch
+        pass: the trigger only marks the packet's WR as kill-stalled
+        (dispatch must not tear down QPs it is iterating), the node
+        actually dies here, between passes."""
+        while self._pending_kills:
+            self.kill_node(self._pending_kills.pop(0))
 
     def unlisten(self, addr) -> "Fabric":
         """Close a listener: new connects to its address are refused
@@ -484,15 +679,49 @@ class Fabric(MeshTransport):
             return peer
         return super()._peer(qp)
 
+    def device_of(self, gid: str):
+        """The jax device at a gid when the grid is physically backed
+        (pods*devices_per_pod == len(jax.devices())); None on the
+        logical-routing rig."""
+        mesh = self.mesh
+        if mesh is None:
+            return None
+        pod, dev = gid.split("/", 1)
+        return mesh.devices[int(pod[3:]), int(dev[3:])]
+
+    def _device_hop(self, dst_gid: str, payload):
+        """Intra-pod cross-DEVICE hop (devices_per_pod > 1): the payload
+        is materialized at the destination device instead of moving by
+        python reference. On a physically-backed grid that is a real
+        ``device_put`` onto the gid's device (the ICI hop); on the
+        logical rig an explicit staging copy stands in — either way the
+        delivered tree no longer aliases the sender's buffers, which is
+        what makes per-device routing testable."""
+        dev = self.device_of(dst_gid)
+
+        def hop(x):
+            if isinstance(x, np.ndarray):
+                return x.copy()
+            if hasattr(x, "shape") and hasattr(x, "dtype"):
+                if dev is not None:
+                    return jax.device_put(x, dev)
+                return jax.numpy.asarray(np.asarray(x))
+            return x
+        return jax.tree.map(hop, payload)
+
     def _move_payload(self, qp: QueuePair, wr: SendWR):
-        """Cross-POD payload trees ride the T1 striped ppermute (packet
-        spraying, MeshTransport's lowering); intra-pod hops move by
-        reference — the wire follows the route."""
+        """The wire follows the route: cross-POD payload trees ride the
+        T1 striped ppermute (packet spraying, MeshTransport's lowering),
+        intra-pod cross-device hops materialize on the destination
+        device (`_device_hop`), and same-gid loopback moves by
+        reference."""
         route = self.routes.get(qp.qp_num)
         src_gid = self.gid_of.get(qp.qp_num)
-        if route is None or src_gid is None or \
-                route.pod == src_gid.split("/", 1)[0]:
+        if route is None or src_gid is None or route.gid == src_gid:
             return self._wr_source(qp, wr)
+        if route.pod == src_gid.split("/", 1)[0]:
+            self.intra_pod_hops += 1
+            return self._device_hop(route.gid, self._wr_source(qp, wr))
         return super()._move_payload(qp, wr)
 
     def flush(self, *endpoints) -> int:
@@ -503,43 +732,120 @@ class Fabric(MeshTransport):
                                   else ep for ep in endpoints])
 
     def process_many(self, qps: list[QueuePair]) -> int:
-        processed = super().process_many(qps)
-        for qp in qps:
-            processed += self._rnr_police(qp)
-        return processed
+        rc = self.ratectl
+        if rc is None:
+            processed = super().process_many(qps)
+            for qp in qps:
+                processed += self._police(qp)
+            self._run_pending_kills()
+            return processed
+        # rate-controlled: drain in paced rounds. Each round throttles
+        # every routed send queue to its route's current allowance,
+        # dispatches + polices, hands the stashed tail back, and ticks
+        # the controller (ECN observation + rate adaptation). Rounds
+        # repeat until the stash drains — one flush still delivers
+        # everything posted, the rate shapes how it drains.
+        total = 0
+        try:
+            while True:
+                stashed = rc.throttle(qps)
+                n = super().process_many(qps)
+                for qp in qps:
+                    n += self._police(qp)
+                self._run_pending_kills()
+                rc.restore()
+                rc.tick(qps)
+                total += n
+                if stashed == 0 or n == 0:
+                    break           # drained, or wedged (RNR/fault stall)
+        finally:
+            rc.restore()            # a mid-dispatch raise must not leak WRs
+        return total
 
-    def _rnr_police(self, qp: QueuePair) -> int:
-        """ibverbs rnr_retry: a SEND left stalled by the dispatch pass
-        runs its WHOLE retry schedule here, inside this flush — each
-        loop iteration models one RNR timeout firing (backoff counted,
-        `on_rnr_backoff` invoked, queue re-dispatched); a head still
-        stalled past the budget retires with IBV_WC_RNR_ERR instead of
-        wedging the queue. rnr_retry == 7 (the ibverbs sentinel) retries
-        forever — the stall-in-place behavior every non-fabric transport
-        keeps, where the NEXT flush is the retry."""
-        if self.rnr_retry >= self.RNR_RETRY_INFINITE:
+    def _police(self, qp: QueuePair) -> int:
+        """The transport's retry schedules, run to completion inside this
+        flush. Two stall families share the loop:
+
+        * **RNR** (receiver not ready, ``fault_stall is None``): ibverbs
+          rnr_retry — each iteration models one RNR timeout firing
+          (backoff counted, `on_rnr_backoff` invoked unless the
+          FaultModel dropped the NAK, queue re-dispatched); a head still
+          stalled past the budget retires IBV_WC_RNR_ERR. rnr_retry == 7
+          (the ibverbs sentinel) retries forever — the stall-in-place
+          behavior every non-fabric transport keeps.
+        * **link faults** (a FaultModel refused the packet): a *dropped*
+          packet spends one unit of the ``retry_cnt`` transport budget
+          and retransmits; budget exhausted retires the WR with
+          IBV_WC_RETRY_EXC_ERR. A *delayed* packet retransmits without
+          touching any budget (capped by MAX_FAULT_TICKS per flush). A
+          *kill*-stalled head stays queued — `_run_pending_kills` is
+          about to flush the whole QP as WR_FLUSH_ERR.
+
+        Error CQEs batch per status run (one encode + one ring produce)
+        and always publish BEFORE a re-dispatch so completion order
+        matches the oracle's."""
+        if self.faults is None and \
+                self.rnr_retry >= self.RNR_RETRY_INFINITE:
             return 0
         extra = 0
-        err_ops: list[int] = []     # exhausted WRs batch their RNR_ERR
-        err_ids: list[int] = []     # CQEs: one encode + ONE ring produce
+        fault_ticks = 0
+        err_ops: list[int] = []
+        err_ids: list[int] = []
+        err_sts: list[int] = []
 
         def publish_errs():
             if not err_ops:
                 return
             if not qp.send_cq.destroyed:
                 qp.send_cq.push_batch(wqe.encode_cqe_batch(
-                    err_ops, err_ids, wqe.IBV_WC_RNR_ERR, 0))
+                    err_ops, err_ids, list(err_sts), 0))
                 try:
                     qp.send_cq.flush()
                 except CQOverrunError:
                     pass            # staged; republishes on next poll
             err_ops.clear()
             err_ids.clear()
+            err_sts.clear()
+
+        def retire(head, status):
+            qp.sq.popleft()
+            qp._fc_retire(head)
+            err_ops.append(head.wr.opcode)
+            err_ids.append(head.wr.wr_id)
+            err_sts.append(status)
 
         while qp.sq:
             head = qp.sq[0]
             if head.wr.opcode != wqe.IBV_WR_SEND:
-                break               # only SENDs stall on RNR
+                break               # only SENDs stall
+            stall = head.fault_stall
+            if stall == "kill":
+                break               # the pending node kill flushes the QP
+            if stall in ("drop", "delay"):
+                if stall == "drop" and head.wire_tries >= self.retry_cnt:
+                    # transport retries exhausted on a lossy link
+                    retire(head, wqe.IBV_WC_RETRY_EXC_ERR)
+                    self.faults.retry_exhausted += 1
+                    extra += 1
+                    if qp.sq:
+                        # the WRs behind the dead head were never
+                        # attempted: give them a fresh dispatch so their
+                        # stall cause (if any) is recorded, not inherited
+                        publish_errs()
+                        extra += super().process_many([qp])
+                    continue
+                if fault_ticks >= self.MAX_FAULT_TICKS:
+                    break           # pathological schedule: next flush
+                fault_ticks += 1
+                head.fault_stall = None
+                if stall == "drop":
+                    head.wire_tries += 1    # retransmission spends budget
+                publish_errs()      # keep CQE order ahead of a re-dispatch
+                extra += super().process_many([qp])
+                continue
+            # RNR stall (receiver not ready)
+            if self.rnr_retry >= self.RNR_RETRY_INFINITE:
+                break
             if head.rnr_tries < self.rnr_retry:
                 publish_errs()      # keep CQE order ahead of a re-dispatch
                 head.rnr_tries += 1
@@ -547,18 +853,22 @@ class Fabric(MeshTransport):
                 # exponential timeout backoff, in rnr_timeout units
                 qp.rnr_backoff_units += \
                     self.rnr_timeout << (head.rnr_tries - 1)
-                if self.on_rnr_backoff is not None:
+                heard = True
+                if self.faults is not None and \
+                        self.faults.drop_rnr_nak(qp, head):
+                    # the NAK was lost: the sender's timeout still fires
+                    # (retry accounting above is unchanged) but the
+                    # receiver-side hook never hears about it
+                    heard = False
+                if heard and self.on_rnr_backoff is not None:
                     # the timeout hook: tests/benches refill the peer
                     # pool here to model a receiver catching up
                     self.on_rnr_backoff(qp, head.rnr_tries)
                 extra += super().process_many([qp])
                 continue
             # retry budget exhausted: complete the WR with RNR_ERR
-            qp.sq.popleft()
-            qp._fc_retire(head)
+            retire(head, wqe.IBV_WC_RNR_ERR)
             qp.rnr_exhausted += 1   # fabric.rnr_exhausted sums this
-            err_ops.append(head.wr.opcode)
-            err_ids.append(head.wr.wr_id)
             extra += 1
             if qp.sq and qp.sq[0].wr.opcode != wqe.IBV_WR_SEND:
                 # a dispatchable (non-SEND) chain was blocked behind the

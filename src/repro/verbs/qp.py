@@ -125,6 +125,17 @@ class _PostedSend:
     # RNR-stall retries consumed so far (fabric transports with a finite
     # rnr_retry budget retire the WR with IBV_WC_RNR_ERR when exhausted)
     rnr_tries: int = 0
+    # lossy-link state (fabrics with a FaultModel installed; see
+    # verbs/faults.py). `psn` is the per-QP packet sequence number stamped
+    # at post time, `wire_attempts` counts admission consults — together
+    # they make every fault verdict a pure function of the packet
+    # identity. `fault_stall` records why the head WR last stalled
+    # ("drop" / "delay" / "kill", None = receiver-not-ready) and
+    # `wire_tries` is the transport retry budget already spent on drops.
+    psn: int = 0
+    wire_attempts: int = 0
+    wire_tries: int = 0
+    fault_stall: str | None = None
 
 
 class QueuePair:
@@ -179,6 +190,10 @@ class QueuePair:
         self.rnr_retries = 0
         self.rnr_exhausted = 0
         self.rnr_backoff_units = 0
+        # per-QP packet sequence, stamped onto posted WRs when the
+        # transport carries a FaultModel (verbs/faults.py): the psn is
+        # half of the packet identity fault verdicts hash over
+        self._psn = 0
         # the T4 context every one-sided op against this QP coalesces in
         # (bound into the engine so handle_packet dispatches into it too)
         self.ctx = pd.engine.bind_context(
@@ -301,6 +316,14 @@ class QueuePair:
             posted = [self._build_wqe(w) for w in chain]
         if self.flow_control:
             self._fc_admit(posted)
+        tp = self.transport
+        if tp is not None and tp.faults is not None:
+            # lossy link: stamp packet sequence numbers so fault verdicts
+            # are a pure function of packet identity (see verbs/faults.py)
+            psn = self._psn
+            for k, ps in enumerate(posted):
+                ps.psn = psn + k
+            self._psn = psn + len(posted)
         self.sq.extend(posted)
         self.doorbell_writes += 1
         self.desc_fetch_dmas += 1       # whole chain rides one fetch DMA

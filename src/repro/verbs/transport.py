@@ -114,6 +114,11 @@ class _CqStage:
 
 
 class LoopbackTransport:
+    # fault-injecting link layer (verbs/faults.py); only Fabric installs
+    # one, but the hook lives here so both dispatch paths consult the
+    # SAME admission points — that's the vectorized/oracle parity
+    faults = None
+
     def __init__(self, vectorized: bool = True):
         self.qps: dict[int, QueuePair] = {}
         self.vectorized = vectorized
@@ -406,7 +411,32 @@ class LoopbackTransport:
         re-runs `_move_payload`), but never a SUCCESS CQE for data that
         did not land."""
         n = len(run)
-        if peer.srq is not None:
+        if self.faults is not None:
+            # lossy link: claim + admit WR-by-WR in exactly the oracle's
+            # order. A refused packet hands its claim straight back and
+            # stalls the rest of the run — decision parity with
+            # `_dispatch_scalar` is what keeps vectorized=False a
+            # bit-exactness oracle under the same fault schedule.
+            rwrs = []
+            for ps in run:
+                if peer.srq is not None:
+                    rwr = peer.srq.take(peer.qp_num)
+                else:
+                    rwr = peer.rq.popleft() if peer.rq else None
+                if rwr is None:
+                    ps.fault_stall = None       # RNR, not a link fault
+                    break
+                if not self.faults.admit(self, qp, ps):
+                    if peer.srq is not None:
+                        peer.srq.untake(peer.qp_num, [rwr])
+                    else:
+                        peer.rq.appendleft(rwr)
+                    break
+                rwrs.append(rwr)
+            run = run[:len(rwrs)]
+            if not run:
+                return 0
+        elif peer.srq is not None:
             rwrs = peer.srq.take_many(peer.qp_num, n)
         else:
             k = min(n, len(peer.rq))
@@ -700,7 +730,18 @@ class LoopbackTransport:
                 else:
                     rwr = peer.rq.popleft() if peer.rq else None
                 if rwr is None:
+                    if self.faults is not None:
+                        ps.fault_stall = None   # RNR, not a link fault
                     break       # RNR: leave this and later SENDs queued
+                if self.faults is not None and \
+                        not self.faults.admit(self, qp, ps):
+                    # refused at the link: hand the claim back and stall
+                    # (`Fabric._police` reads ps.fault_stall for the why)
+                    if peer.srq is not None:
+                        peer.srq.untake(peer.qp_num, [rwr])
+                    else:
+                        peer.rq.appendleft(rwr)
+                    break
                 payload, nbytes = self._wr_payload(qp, ps)
                 delivered = payload
                 if rwr.mr is not None:

@@ -44,6 +44,7 @@ IBV_WC_SUCCESS = 0
 IBV_WC_RNR_ERR = 1            # receiver not ready (no posted recv WR)
 IBV_WC_ACCESS_ERR = 2         # bad lkey/rkey
 IBV_WC_WR_FLUSH_ERR = 3       # WR flushed by QP teardown / ERR transition
+IBV_WC_RETRY_EXC_ERR = 4      # transport retries exhausted (lossy link)
 
 # -- flags
 WQE_F_INLINE = 1 << 0

@@ -1,0 +1,426 @@
+"""ISSUE 8 — unreliable fabric: fault-injecting links (drop/delay/dup +
+RNR-NAK loss), DCQCN-flavored rate control, node kills with disconnect
+events, and tenant-visible failover (KV transfer replay, serve engine
+client-loss accounting).
+
+The determinism contract under test: a FaultModel's verdicts are a pure
+hash of the packet identity, so for ANY seeded loss/delay schedule and
+opcode mix the vectorized datapath stays bit-exact against the
+``vectorized=False`` scalar oracle — and faulted WRs retire with error
+statuses (RETRY_EXC / RNR / FLUSH), never a phantom SUCCESS."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline rig: sampled fallback
+    from _hyp import given, settings, st
+
+from repro import verbs
+from repro.obs import metrics
+
+
+_KINDS = ["send_inline", "send_big", "send_unsig", "write", "read"]
+
+
+def _make_wrs(kinds, rkey, rng):
+    wrs = []
+    for i, kind in enumerate(kinds):
+        if kind == "send_inline":
+            wrs.append(verbs.SendWR(wr_id=i, payload=np.array(
+                [i, 7, i * i], np.int32)))
+        elif kind == "send_big":
+            wrs.append(verbs.SendWR(wr_id=i, inline=False, payload=rng
+                       .standard_normal(40).astype(np.float32)))
+        elif kind == "send_unsig":
+            wrs.append(verbs.SendWR(wr_id=i, signaled=False,
+                                    payload=np.array([i], np.int64)))
+        elif kind == "write":
+            k = int(rng.integers(1, 4))
+            wrs.append(verbs.SendWR(
+                wr_id=i, opcode=verbs.IBV_WR_RDMA_WRITE, remote_key=rkey,
+                remote_offsets=rng.choice(8, size=k, replace=False),
+                payload=rng.standard_normal((k, 4)).astype(np.float32)))
+        elif kind == "read":
+            k = int(rng.integers(1, 4))
+            wrs.append(verbs.SendWR(
+                wr_id=i, opcode=verbs.IBV_WR_RDMA_READ, remote_key=rkey,
+                remote_offsets=rng.choice(8, size=k, replace=False)))
+    return wrs
+
+
+def _observe(ep, cm, fm):
+    return dict(
+        stalled=len(ep.qp.sq),
+        region=np.asarray(cm.pd.engine.regions["dst"]),
+        send_wcs=[(w.wr_id, w.opcode, w.status, w.length,
+                   None if w.data is None else np.asarray(w.data))
+                  for w in ep.poll()],
+        recv_wcs=[(w.wr_id, w.opcode, w.status, w.length,
+                   None if w.data is None else np.asarray(w.data))
+                  for w in ep.peer.recv_cq.poll()],
+        faults=(fm.drops_injected, fm.delays_injected,
+                fm.duplicates_absorbed, fm.retry_exhausted,
+                fm.wire_packets))
+
+
+def _assert_same(a, b):
+    assert a["stalled"] == b["stalled"]
+    assert a["faults"] == b["faults"]
+    np.testing.assert_array_equal(a["region"], b["region"])
+    for key in ("send_wcs", "recv_wcs"):
+        assert len(a[key]) == len(b[key]), key
+        for x, y in zip(a[key], b[key]):
+            assert x[:4] == y[:4], key
+            if x[4] is None or y[4] is None:
+                assert x[4] is None and y[4] is None
+            else:
+                np.testing.assert_array_equal(x[4], y[4])
+
+
+def _run_faulted(kinds, n_recv, seed, vectorized, *,
+                 drop=0.25, delay=0.15, dup=0.1, retry_cnt=2):
+    verbs.ProtectionDomain._next_key = 0x7000
+    fm = verbs.FaultModel(seed, drop=drop, delay=delay, dup=dup)
+    f = verbs.Fabric(pods=2, vectorized=vectorized, faults=fm,
+                     retry_cnt=retry_cnt, rnr_retry=2)
+    cm = f.node("pod1/dev0")
+    dst = cm.pd.reg_mr("dst", np.zeros((8, 4), np.float32))
+    ep = f.connect(cm.listen(depth=1024, max_wr=256, srq=None),
+                   depth=1024, max_wr=256)
+    for i in range(n_recv):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=100 + i))
+    rng = np.random.default_rng(seed)
+    ep.post_send(_make_wrs(kinds, dst.rkey, rng))
+    ep.flush()
+    return _observe(ep, cm, fm)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.sampled_from(_KINDS), min_size=1, max_size=24),
+       st.integers(0, 24), st.integers(0, 1_000_000))
+def test_faulted_delivery_vec_matches_scalar_oracle(kinds, n_recv, seed):
+    """For ANY seeded loss/delay/dup schedule over any opcode mix and
+    recv budget: completions (ids, statuses, order), MR contents, stall
+    points AND injection counters through the vectorized datapath match
+    the scalar oracle exactly."""
+    _assert_same(_run_faulted(kinds, n_recv, seed, True),
+                 _run_faulted(kinds, n_recv, seed, False))
+
+
+def _run_sends(seed, *, faults, retry_cnt=1, n=16):
+    verbs.ProtectionDomain._next_key = 0x7000
+    f = verbs.Fabric(pods=2, faults=faults, retry_cnt=retry_cnt)
+    cm = f.node("pod1/dev0")
+    ep = f.connect(cm.listen(depth=1024, max_wr=256, srq=None),
+                   depth=1024, max_wr=256)
+    for i in range(n):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=100 + i))
+    ep.post_send([verbs.SendWR(wr_id=i, payload=np.array(
+        [i, seed % 97, i * i], np.int64)) for i in range(n)])
+    ep.flush()
+    sends = {w.wr_id: w.status for w in ep.poll()}
+    recvs = [np.asarray(w.data) for w in ep.peer.recv_cq.poll()]
+    return sends, recvs
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1_000_000), st.integers(0, 90))
+def test_lossy_link_never_phantoms_success(seed, drop_pct):
+    """Against the lossless oracle: every delivered payload is bit-exact,
+    the delivered set is EXACTLY the SUCCESS-retired send set, and every
+    dropped-to-exhaustion WR retires IBV_WC_RETRY_EXC_ERR — data that
+    never landed never completes SUCCESS."""
+    ref_sends, ref_recvs = _run_sends(seed, faults=None)
+    ref_by_id = {int(r[0]): r for r in ref_recvs}
+    fm = verbs.FaultModel(seed, drop=drop_pct / 100.0)
+    sends, recvs = _run_sends(seed, faults=fm, retry_cnt=1)
+    ok = {i for i, s in sends.items() if s == verbs.IBV_WC_SUCCESS}
+    bad = {i for i, s in sends.items() if s == verbs.IBV_WC_RETRY_EXC_ERR}
+    assert ok | bad == set(range(16)) and not (ok & bad)
+    delivered = {int(r[0]) for r in recvs}
+    assert delivered == ok                      # no phantoms, no losses
+    for r in recvs:
+        np.testing.assert_array_equal(r, ref_by_id[int(r[0])])
+    assert len(bad) == fm.retry_exhausted
+    assert {s for s in sends.values()} <= {verbs.IBV_WC_SUCCESS,
+                                           verbs.IBV_WC_RETRY_EXC_ERR}
+
+
+# -- per-verdict semantics ---------------------------------------------------
+def test_drop_exhausts_transport_retry_budget():
+    fm = verbs.FaultModel(3, drop=1.0)
+    sends, recvs = _run_sends(0, faults=fm, retry_cnt=2, n=4)
+    assert recvs == []
+    assert sends == {i: verbs.IBV_WC_RETRY_EXC_ERR for i in range(4)}
+    assert fm.retry_exhausted == 4
+    assert fm.drops_injected == 4 * 3           # initial + 2 retries each
+    assert fm.wire_packets == 0
+
+
+def test_delay_delivers_within_one_flush_without_spending_retries():
+    fm = verbs.FaultModel(11, delay=0.8)
+    sends, recvs = _run_sends(0, faults=fm, retry_cnt=0, n=8)
+    assert sends == {i: verbs.IBV_WC_SUCCESS for i in range(8)}
+    assert [int(r[0]) for r in recvs] == list(range(8))
+    assert fm.delays_injected > 0
+    assert fm.retry_exhausted == 0              # delay is budget-free
+
+
+def test_duplicates_absorbed_exactly_once():
+    fm = verbs.FaultModel(7, dup=1.0)
+    sends, recvs = _run_sends(0, faults=fm, n=8)
+    assert sends == {i: verbs.IBV_WC_SUCCESS for i in range(8)}
+    assert [int(r[0]) for r in recvs] == list(range(8))   # exactly once
+    assert fm.duplicates_absorbed == 8
+
+
+def test_rnr_nak_drop_suppresses_backoff_hook():
+    """A lost RNR NAK: the sender's retry timer still burns budget, but
+    the receiver-side refill hook never hears the NAK — so the refill
+    that would have rescued the SEND never happens."""
+    hook_calls = []
+
+    def refill(qp, tries):
+        hook_calls.append(tries)
+        ep.peer.qp.rq.append(verbs.RecvWR(wr_id=55))
+
+    fm = verbs.FaultModel(1, rnr_nak_drop=1.0)
+    f = verbs.Fabric(pods=2, faults=fm, rnr_retry=3, on_rnr_backoff=refill)
+    ep = f.connect(f.node("pod1/dev0").listen(depth=32, srq=None),
+                   depth=32)
+    ep.post_send(verbs.SendWR(wr_id=9, payload=np.array([4], np.int64)))
+    ep.flush()
+    assert hook_calls == []                     # every NAK was lost
+    assert fm.rnr_naks_dropped >= 1
+    assert [(w.wr_id, w.status) for w in ep.poll()] == \
+           [(9, verbs.IBV_WC_RNR_ERR)]
+    assert ep.peer.recv_cq.poll() == []
+
+
+# -- node kills + disconnect events ------------------------------------------
+def test_kill_after_mid_flush_flushes_survivors_and_fans_out_events():
+    events = []
+    fm = verbs.FaultModel(0).kill_after("pod1/dev0", 3)
+    f = verbs.Fabric(pods=2, faults=fm)
+    addr = f.node("pod1/dev0").listen(depth=64, srq=None)
+    ep = f.connect(addr, depth=64, on_disconnect=lambda e: events.append(e))
+    for i in range(6):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=100 + i))
+    ep.post_send([verbs.SendWR(wr_id=i, payload=np.array([i], np.int64))
+                  for i in range(6)])
+    ep.flush()
+    # packets 1-2 landed; packet 3 tripped the kill; the rest flushed
+    assert [(w.wr_id, w.status) for w in ep.poll()] == \
+        [(0, verbs.IBV_WC_SUCCESS), (1, verbs.IBV_WC_SUCCESS)] + \
+        [(i, verbs.IBV_WC_WR_FLUSH_ERR) for i in range(2, 6)]
+    assert fm.kills_triggered == 1
+    assert f.dead_gids == {"pod1/dev0"} and not f.alive("pod1/dev0")
+    assert f.nodes_killed == 1 and f.disconnects == 1
+    assert len(events) == 1 and events[0].qp is ep.qp
+    assert ep.qp.state == verbs.QPState.ERR
+    # the dead node refuses new control-plane traffic
+    with pytest.raises(verbs.QPStateError):
+        f.connect(addr, depth=32)
+    with pytest.raises(verbs.QPStateError):
+        f.node("pod1/dev0").listen(depth=32)
+    alive_addr = f.node("pod0/dev0").listen(depth=32, srq=None)
+    with pytest.raises(verbs.QPStateError):
+        f.connect(alive_addr, src_gid="pod1/dev0")   # dead SOURCE
+
+
+def test_graceful_disconnect_fires_event_on_passive_side_only():
+    client_ev, server_ev, cm_ev = [], [], []
+    f = verbs.Fabric(pods=2)
+    f.node("pod1/dev0").add_on_disconnect(lambda e: cm_ev.append(e))
+    addr = f.node("pod1/dev0").listen(
+        depth=32, srq=None, on_disconnect=lambda e: server_ev.append(e))
+    ep = f.connect(addr, depth=32,
+                   on_disconnect=lambda e: client_ev.append(e))
+    f.disconnect(ep)                    # client hangs up
+    assert client_ev == []              # the initiator asked; no event
+    assert len(server_ev) == 1 and server_ev[0] is ep.peer
+    assert len(cm_ev) == 1
+    # and the other direction: the SERVER hangs up, the client observes
+    ep2 = f.connect(addr, depth=32,
+                    on_disconnect=lambda e: client_ev.append(e))
+    f.disconnect(ep2.peer)
+    assert len(client_ev) == 1 and client_ev[0] is ep2
+
+
+def test_kill_pod_takes_down_every_device():
+    f = verbs.Fabric(pods=2, devices_per_pod=2)
+    f.kill_pod("pod1")
+    assert f.dead_gids == {"pod1/dev0", "pod1/dev1"}
+    assert f.nodes_killed == 2
+    assert f.alive("pod0/dev0") and f.alive("pod0/dev1")
+
+
+# -- DCQCN-flavored rate control ---------------------------------------------
+def test_rate_control_marks_backs_off_and_recovers():
+    """Overdrive a route past the ECN watermark: the controller marks,
+    multiplicatively decreases toward min_rate, pacing still delivers
+    every WR, and drained flushes additively recover toward line_rate —
+    all visible under gid-stable registry scopes."""
+    f = verbs.Fabric(pods=2, rate_control=dict(
+        line_rate=16, ecn_watermark=8, min_rate=1.0, ai_increment=4.0))
+    ep = f.connect(f.node("pod1/dev0").listen(depth=256, srq=None),
+                   depth=256, max_wr=256)
+    for i in range(64):
+        ep.peer.post_recv(verbs.RecvWR(wr_id=100 + i))
+    ep.post_send([verbs.SendWR(wr_id=i, payload=np.array([i], np.int64),
+                               signaled=False) for i in range(64)])
+    ep.flush()
+    assert len(ep.peer.recv_cq.poll()) == 64    # pacing loses nothing
+    snap = metrics.get_registry().snapshot()
+    scope = metrics.scope_of(f).path
+    route = f"{scope}/route:pod0/dev0->pod1/dev0"
+    assert snap[f"{route}/ecn_marks"] > 0
+    assert snap[f"{route}/rate_decreases"] > 0
+    assert snap[f"{route}/throttled_wrs"] > 0
+    assert f.ratectl.pacing_rounds > 1          # paced, not one blast
+    # drained CQ -> additive recovery back to line rate
+    for _ in range(16):
+        f.process_many([ep.qp])
+    assert metrics.get_registry().snapshot()[
+        f"{route}/current_rate"] == 16.0
+
+
+def test_rate_control_off_path_unchanged():
+    """Without rate_control the fabric takes the plain dispatch path —
+    no pacing rounds, no route scopes minted."""
+    f = verbs.Fabric(pods=2)
+    assert f.ratectl is None
+    ep = f.connect(f.node("pod1/dev0").listen(depth=32, srq=None),
+                   depth=32)
+    ep.peer.post_recv(verbs.RecvWR(wr_id=1))
+    ep.post_send(verbs.SendWR(wr_id=1, payload=np.array([2], np.int64)))
+    ep.flush()
+    assert [w.wr_id for w in ep.peer.recv_cq.poll()] == [1]
+    scope = metrics.scope_of(f).path
+    assert not any(k.startswith(f"{scope}/route:")
+                   for k in metrics.get_registry().snapshot())
+
+
+# -- devices_per_pod > 1: device-granular gids in anger ----------------------
+def test_intra_pod_cross_device_hop_materializes_payload():
+    """pod0/dev0 -> pod0/dev1: same pod, different device. The payload
+    is materialized at the destination device (a staging copy on the
+    logical rig) instead of moving by python reference, and the hop is
+    counted."""
+    f = verbs.Fabric(pods=1, devices_per_pod=2)
+    assert f.gids == ["pod0/dev0", "pod0/dev1"]
+    ep = f.connect(f.node("pod0/dev1").listen(depth=32, srq=None),
+                   depth=32, src_gid="pod0/dev0")
+    payload = np.arange(12, dtype=np.float32).reshape(3, 4)
+    ep.peer.post_recv(verbs.RecvWR(wr_id=5))
+    ep.post_send(verbs.SendWR(wr_id=5, inline=False, payload=payload))
+    ep.flush()
+    [wc] = ep.peer.recv_cq.poll()
+    got = np.asarray(wc.data)
+    np.testing.assert_array_equal(got, payload)
+    assert not np.shares_memory(got, payload)   # a real hop, not a ref
+    assert f.intra_pod_hops == 1
+
+
+def test_same_gid_loopback_stays_by_reference():
+    f = verbs.Fabric(pods=1, devices_per_pod=2)
+    ep = f.connect(f.node("pod0/dev0").listen(depth=32, srq=None),
+                   depth=32, src_gid="pod0/dev0")
+    payload = np.ones((2, 2), np.float32)
+    ep.peer.post_recv(verbs.RecvWR(wr_id=1))
+    ep.post_send(verbs.SendWR(wr_id=1, inline=False, payload=payload))
+    ep.flush()
+    [wc] = ep.peer.recv_cq.poll()
+    assert np.shares_memory(np.asarray(wc.data), payload)
+    assert f.intra_pod_hops == 0
+
+
+def test_device_granular_kill_spares_sibling_device():
+    """Killing pod1/dev1 must not touch pod1/dev0: the failure domain is
+    the DEVICE gid, not the pod."""
+    f = verbs.Fabric(pods=2, devices_per_pod=2)
+    ep0 = f.connect(f.node("pod1/dev0").listen(depth=32, srq=None),
+                    depth=32)
+    ep1 = f.connect(f.node("pod1/dev1").listen(depth=32, srq=None),
+                    depth=32)
+    ep1.post_send(verbs.SendWR(wr_id=7, payload=np.array([1], np.int64)))
+    f.kill_node("pod1/dev1")
+    assert f.alive("pod1/dev0") and not f.alive("pod1/dev1")
+    assert [(w.wr_id, w.status) for w in ep1.poll()] == \
+           [(7, verbs.IBV_WC_WR_FLUSH_ERR)]
+    # the sibling device keeps serving
+    ep0.peer.post_recv(verbs.RecvWR(wr_id=2))
+    ep0.post_send(verbs.SendWR(wr_id=2, payload=np.array([3], np.int64)))
+    ep0.flush()
+    assert [w.wr_id for w in ep0.peer.recv_cq.poll()] == [2]
+
+
+def test_fault_scope_rehomes_under_fabric():
+    fm = verbs.FaultModel(0, drop=0.5)
+    f = verbs.Fabric(pods=2, faults=fm)
+    assert metrics.scope_of(fm).path.startswith(
+        metrics.scope_of(f).path + "/")
+
+
+# -- tenant-visible failover --------------------------------------------------
+def _reduced_model(arch="gemma-2b", key=0):
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models.registry import build_model
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(key))
+    return cfg, model, params
+
+
+def test_kv_transfer_replays_through_node_kill():
+    """Kill the connected decode node mid-transfer: the engine observes
+    the disconnect event, re-resolves to the surviving decode listener,
+    replays the SEND, and the delivered tree is bit-exact — with the
+    registry counters proving one re-resolution and one replay."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.kvtransfer import KVTransferEngine
+    cfg, model, params = _reduced_model()
+    _, caches = model.prefill(params, jnp.ones((2, 8), jnp.int32))
+    fm = verbs.FaultModel(seed=7)
+    f = verbs.Fabric(pods=3, faults=fm)
+    eng = KVTransferEngine(model, 2, 8, fabric=f)
+    out = eng.transfer(caches)                  # clean transfer first
+    assert eng.transfers_replayed == 0
+    primary = eng._listen_addrs[eng._active].gid
+    fm.kill_after(primary, 1)                   # die on the next packet
+    out = eng.transfer(caches)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(caches)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert eng.transfers_replayed == 1
+    assert eng.route_reresolutions == 1
+    assert eng._listen_addrs[eng._active].gid != primary
+    assert not f.alive(primary) and f.disconnects >= 1
+    snap = metrics.get_registry().snapshot()
+    scope = eng._metrics.path
+    assert snap[f"{scope}/transfers_replayed"] == 1
+    assert snap[f"{scope}/route_reresolutions"] == 1
+    eng.close()                                 # still releases everything
+    assert not f.qps and not f._listeners
+
+
+def test_serve_engine_counts_client_disconnects():
+    """A remote client's node dies: the serve listener's disconnect event
+    fires and the tenant-visible `client_disconnects` counter moves."""
+    from repro.serve.engine import ServeEngine
+    cfg, model, params = _reduced_model()
+    f = verbs.Fabric(pods=2)
+    eng = ServeEngine(model, params, max_batch=2, max_seq=48, fabric=f)
+    assert eng.client_disconnects == 0
+    client = f.connect(eng._listen_addr, src_gid="pod1/dev0", depth=32)
+    f.kill_node("pod1/dev0")
+    assert eng.client_disconnects == 1
+    assert client.qp.state == verbs.QPState.ERR
+    # the engine itself still serves local traffic after the kill
+    rid = eng.submit([5, 3, 9], max_new_tokens=2)
+    results = eng.run_until_done()
+    assert len(results[rid]) == 2
+    eng.close()     # graceful close: its own loopback client "hangs up"
+    assert eng.client_disconnects == 2

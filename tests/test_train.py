@@ -148,3 +148,94 @@ def test_adamw_warmup_and_clip():
     assert float(m["lr"]) == pytest.approx(0.1)   # step 1 of 10 warmup
     assert float(m["grad_norm"]) == pytest.approx(200.0)
     assert bool(jnp.isfinite(p["w"]).all())
+
+
+def test_double_failure_recovers_twice(tmp_path):
+    """A SECOND failure raised from step_fn during the replay (after the
+    `_resumed` restore) triggers a second restore — and the end state is
+    still exactly the uninterrupted run's."""
+    from repro.train.fault import SimulatedFailure
+    cfg, model, params, opt_state, step = _setup(key=3)
+    executions = {9: 0}
+
+    def flaky_step(state, batch):
+        p, o, m = step(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    def batch_fn(i):
+        return data_lib.synthetic_batch(i, 2, 16, cfg.vocab_size)
+
+    state0 = {"params": params, "opt": opt_state}
+    ck_ref = Checkpointer(str(tmp_path / "ref"), async_write=False)
+    ref = TrainController(flaky_step, batch_fn, ck_ref, checkpoint_every=4)
+    ref_state, _, _ = ref.run(state0, 0, 12)
+
+    current = {"step": None}
+
+    def tracking_batch_fn(i):
+        current["step"] = i
+        return batch_fn(i)
+
+    def failing_step_fn(state, batch):
+        if current["step"] == 9 and executions[9] < 2:
+            executions[9] += 1
+            raise SimulatedFailure("node loss at step 9")
+        return flaky_step(state, batch)
+
+    ck = Checkpointer(str(tmp_path / "got"), async_write=False)
+    ctl = TrainController(failing_step_fn, tracking_batch_fn, ck,
+                          checkpoint_every=4)
+    got_state, last, hist = ctl.run(state0, 0, 12)
+    assert last == 12
+    assert ctl.restarts == 2
+    assert executions[9] == 2
+    assert [s for s, _ in hist][-4:] == [8, 9, 10, 11]
+    for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                    jax.tree.leaves(got_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_failure_on_checkpoint_boundary(tmp_path):
+    """fail_at landing exactly on a checkpoint_every boundary restores
+    from the checkpoint written at the failure step itself (zero replay
+    distance to the fault) and still finishes bit-exact."""
+    cfg, model, params, opt_state, step = _setup(key=5)
+
+    def step_fn(state, batch):
+        p, o, m = step(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, m
+
+    def batch_fn(i):
+        return data_lib.synthetic_batch(i, 2, 16, cfg.vocab_size)
+
+    state0 = {"params": params, "opt": opt_state}
+    ck_ref = Checkpointer(str(tmp_path / "ref"), async_write=False)
+    ref = TrainController(step_fn, batch_fn, ck_ref, checkpoint_every=4)
+    ref_state, _, _ = ref.run(state0, 0, 12)
+
+    ck = Checkpointer(str(tmp_path / "got"), async_write=False)
+    ctl = TrainController(step_fn, batch_fn, ck, checkpoint_every=4)
+    got_state, last, hist = ctl.run(state0, 0, 12, fail_at=8)
+    assert last == 12
+    assert ctl.restarts == 1
+    assert ctl.failures_injected == 1
+    assert ctl.checkpoints_saved >= 3          # steps 4, 8 and the final
+    # the replay resumes AT the failure step (checkpoint written at 8)
+    assert [s for s, _ in hist] == list(range(8)) + list(range(8, 12))
+    for a, b in zip(jax.tree.leaves(ref_state["params"]),
+                    jax.tree.leaves(got_state["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fault_counters_live_in_registry(tmp_path):
+    """StragglerMonitor/TrainController bookkeeping is registry-backed:
+    the counters appear under straggler{i}/ and train_controller{i}/."""
+    from repro.obs import metrics as obs
+    mon = StragglerMonitor(factor=3.0)
+    for i in range(10):
+        mon.observe(i, 0.01)
+    assert mon.observe(10, 0.2)
+    scope = mon._metrics.path
+    snap = obs.get_registry().snapshot()
+    assert snap[f"{scope}/stragglers_flagged"] == 1
+    assert snap[f"{scope}/stragglers_flagged"] == mon.stragglers_flagged
