@@ -6,6 +6,10 @@ datapaths, batch-wise dispatch vs the retained element-at-a-time oracle
 
   * loopback SEND   — recv claim + zero-copy batched inline delivery +
                       CQE per WR (auto-inline payloads: the PR 7 path);
+  * MR-sourced SEND — payload=None + local mr/offsets: the run's sources
+                      extract with ONE fused `gather_records` launch
+                      (`_fused_mr_rows`), hard-asserted at exactly
+                      launches_per_flush == 1 for multi-WR chains;
   * RDMA_WRITE      — one-sided writes into one remote MR (the fused
                       scatter: launches/WR is the paper's Fig. 16 axis);
   * SRQ fan-in      — 4 client QPs blasting one shared recv pool / CQ.
@@ -49,6 +53,31 @@ def _send_setup(n: int, vectorized: bool):
     recvs = [verbs.RecvWR(wr_id=i) for i in range(n)]
     wrs = [verbs.SendWR(wr_id=i, payload=payload, signaled=False)
            for i in range(n)]
+
+    def once():
+        srq.post_recv(recvs)
+        pair.client.post_send(wrs)
+        pair.client.flush()
+        wcs = pair.server_recv_cq.poll()
+        assert len(wcs) == n
+        return pair
+
+    return once, pair.server, n, 1
+
+
+def _send_mr_setup(n: int, vectorized: bool):
+    srq = verbs.SharedReceiveQueue(max_wr=n + 8)
+    pair = verbs.VerbsPair(depth=n + 16, publish_every=64, max_wr=n + 8,
+                           srq=srq, vectorized=vectorized)
+    src = pair.pd.reg_mr("src", np.arange(n * 4, dtype=np.float32)
+                         .reshape(n, 4))
+    recvs = [verbs.RecvWR(wr_id=i) for i in range(n)]
+    # payload=None + local mr/offsets: the payload is MR-sourced, and
+    # inline=False keeps it off the cacheline so the extraction itself
+    # is what the chain exercises (one fused gather per run, not n
+    # per-WR `pd.mr_array` reads)
+    wrs = [verbs.SendWR(wr_id=i, mr=src, offsets=[i], inline=False,
+                        signaled=False) for i in range(n)]
 
     def once():
         srq.post_recv(recvs)
@@ -114,8 +143,8 @@ def _fanin_setup(n: int, vectorized: bool):
     return once, None, total, N_CLIENTS
 
 
-_FAMILIES = {"send": _send_setup, "write": _write_setup,
-             "srq_fanin": _fanin_setup}
+_FAMILIES = {"send": _send_setup, "send_mr": _send_mr_setup,
+             "write": _write_setup, "srq_fanin": _fanin_setup}
 
 
 def _measure_interleaved(setup, n: int):
@@ -180,6 +209,14 @@ def run():
             before = fused.value
             once_v()
             lpf = (fused.value - before) / flushes
+            if fam == "send_mr":
+                # the compiled-flush contract for MR-sourced SENDs: a
+                # multi-WR run extracts with exactly ONE fused gather
+                # launch; a 1-WR chain rides scalar dispatch launch-free
+                want = 1.0 if n > verbs.SCALAR_DISPATCH_MAX else 0.0
+                assert lpf == want, (
+                    f"line_rate_send_mr_{n}wr: launches_per_flush "
+                    f"{lpf:.3f}, expected {want}")
             derived = (f"total_wrs={total};"
                        f"wrs_per_s={total / vec * 1e6:.0f};"
                        f"scalar_wrs_per_s={total / scal * 1e6:.0f};"
@@ -193,4 +230,106 @@ def run():
             rows.append((f"line_rate_{fam}_{n}wr",
                          TimingStats([t / total for t in vec.samples]),
                          derived))
+    rows += _ring_xover_rows()
+    rows += _serve_step_row(real)
     return rows
+
+
+# crossover sweep grid: depths bracketing DEVICE_RING_AUTO_DEPTH's TPU
+# entry, the two publish cadences the datapaths actually use
+XOVER_DEPTHS = (64, 512, 4096)
+XOVER_PUBLISH = (8, 64)
+
+
+def _time_ring_cycles(ring, batch: np.ndarray, iters: int = 5):
+    """us per produce+consume cycle (median of `iters`, 1 warm)."""
+    import time as _t
+    samples = []
+    for it in range(iters + 1):
+        t0 = _t.perf_counter_ns()
+        ring.produce(batch)
+        out = ring.consume(None)
+        dt = (_t.perf_counter_ns() - t0) / 1e3
+        assert out.shape[0] == batch.shape[0]
+        if it:                       # first cycle warms jit/allocators
+            samples.append(dt)
+    return TimingStats(samples)
+
+
+def _ring_xover_rows():
+    """The device-residency crossover sweep (tentpole b evidence): host
+    vs device ring produce+consume wall time over CQ depth x
+    publish_every. `DEVICE_RING_AUTO_DEPTH` is SET FROM this measurement
+    — on this rig (cpu backend: 'device' memory IS host memory) device
+    stays slower at every depth, there is no crossover, and the policy
+    table has no cpu entry, so `auto_device` resolves every default-CQ
+    ring to host. The committed rows are the receipt."""
+    from repro.core.notification import (DEVICE_RING_AUTO_DEPTH, Ring,
+                                         _auto_device)
+    import jax
+    backend = jax.default_backend()
+    auto = DEVICE_RING_AUTO_DEPTH.get(backend, -1)
+    rows = []
+    real = metrics.get_registry()
+    # scratch registry: sweep timing launches must not skew the
+    # module's deterministic counter snapshot
+    metrics.set_registry(metrics.Registry())
+    try:
+        for depth in XOVER_DEPTHS:
+            batch = np.arange(depth * 8, dtype=np.int64).reshape(depth, 8)
+            for pe in XOVER_PUBLISH:
+                host = _time_ring_cycles(
+                    Ring(depth, publish_every=pe, device=False), batch)
+                dev = _time_ring_cycles(
+                    Ring(depth, publish_every=pe, device=True), batch)
+                rows.append((
+                    f"line_rate_ring_xover_{depth}d_{pe}pe", dev,
+                    f"host_us={host:.1f};device_us={dev:.1f};"
+                    f"device_over_host={dev / host:.2f}x;"
+                    f"auto_depth={auto};"
+                    f"auto_resolves_device="
+                    f"{int(_auto_device(depth, True))}"))
+    finally:
+        metrics.set_registry(real)
+    return rows
+
+
+def _serve_step_row(real):
+    """Tentpole (c) proof: a ServeEngine(device_ring=True) serving step
+    — submit flush (launch-free unsignaled inline SENDs) + fused
+    publish+poll + admit — lands the whole verbs datapath in ONE device
+    launch, hard-asserted on the fused/launches + fused/ring_launches
+    delta per active admitting step."""
+    import time as _t
+
+    import jax
+
+    from repro.configs.base import get_config, reduced
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeEngine
+
+    model = build_model(reduced(get_config("gemma-2b")))
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_batch=2, max_seq=48,
+                      device_ring=True)
+    assert eng.ring.device and eng.ep.peer.recv_cq.fused_poll
+    gather = real.scope("fused").counter("launches")
+    ring_l = real.scope("fused").counter("ring_launches")
+    eng.submit([5, 3, 9, 1], max_new_tokens=2)
+    eng.step()                       # warm (jit prefill/decode, codecs)
+    iters, samples = 6, []
+    for i in range(iters):
+        eng.submit([7, 1 + i, 2], max_new_tokens=2)
+        before = gather.value + ring_l.value
+        t0 = _t.perf_counter_ns()
+        active = eng.step()
+        samples.append((_t.perf_counter_ns() - t0) / 1e3)
+        launches = gather.value + ring_l.value - before
+        assert active >= 1
+        assert launches == 1, (
+            f"serve step: {launches} datapath launches, expected the "
+            "ONE fused produce_consume")
+    eng.run_until_done()
+    return [("line_rate_serve_step", TimingStats(samples),
+             f"launches_per_step=1.000;steps={iters};"
+             f"requests={eng.requests_submitted}")]

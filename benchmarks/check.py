@@ -35,8 +35,14 @@ import tempfile
 # "lower" metric tolerates zero only). Wall metrics are the WALL set;
 # everything else is a deterministic counter.
 HEADLINES = {
+    # launches_per_flush covers the MR-sourced SEND gather contract
+    # (send_mr rows: 1.0 fused launch per multi-WR flush, 0 for 1-WR);
+    # launches_per_step is the serve-step contract (ONE fused
+    # produce_consume per active step — the bench hard-asserts the
+    # delta, the gate keeps the committed row honest)
     "line_rate": {"wrs_per_s": "higher", "launches_per_wr": "lower",
                   "launches_per_flush": "lower",
+                  "launches_per_step": "lower",
                   "speedup_vs_scalar": "higher"},
     "srq": {"desc_dmas_per_wr": "lower", "overruns": "lower"},
     "fabric": {"desc_dmas_per_wr": "lower", "launches_per_wr": "lower",

@@ -22,6 +22,15 @@ Inside a compiled body, flag:
   * ``float(...)`` / ``int(...)`` / ``bool(...)`` on a non-constant —
     concretization, a trace error or a silent constant fold.
 
+A second rule guards the ISSUE 9 contract from the other side: inside
+the batch-wise dispatch run loops (functions named ``_run_*`` /
+``_land_*`` / ``_dispatch*``, minus the ``*_scalar`` oracles), a
+``.mr_array(...)`` call under a For/While/comprehension is a per-WR MR
+fetch — the pattern the fused ``_fused_mr_rows`` gather replaced (one
+``mr_array`` + one ``gather_records`` launch per same-MR segment).
+Hoist the fetch out of the loop or route the run through the fused
+extraction.
+
     python scripts/lint_hot_path.py [--root src/repro]
 
 Exit 0 clean, 1 with a violation listing otherwise (wired into
@@ -88,14 +97,47 @@ def _violations_in(fn: ast.FunctionDef, path: str) -> list[str]:
     return out
 
 
+_DISPATCH_PREFIXES = ("_run_", "_land_", "_dispatch")
+_LOOP_NODES = (ast.For, ast.While, ast.ListComp, ast.SetComp,
+               ast.DictComp, ast.GeneratorExp)
+
+
+def _is_dispatch_fn(name: str) -> bool:
+    """Hot dispatch run loops — the `*_scalar` oracles are exempt (the
+    element-at-a-time path is the bit-exactness reference, per-WR by
+    design)."""
+    return name.startswith(_DISPATCH_PREFIXES) and \
+        not name.endswith("_scalar")
+
+
+def _mr_array_in_loops(fn: ast.FunctionDef, path: str) -> list[str]:
+    out = []
+    for node in ast.walk(fn):
+        if not isinstance(node, _LOOP_NODES):
+            continue
+        for call in ast.walk(node):
+            if isinstance(call, ast.Call) and \
+                    isinstance(call.func, ast.Attribute) and \
+                    call.func.attr == "mr_array":
+                out.append(
+                    f"{path}:{call.lineno}: per-WR `.mr_array(...)` "
+                    f"inside a loop in dispatch `{fn.name}` — fetch "
+                    "once per same-MR segment and gather fused "
+                    "(`_fused_mr_rows`), not per WR")
+    return out
+
+
 def scan_module(path: str) -> list[str]:
     with open(path) as f:
         tree = ast.parse(f.read(), filename=path)
     out: list[str] = []
     for node in ast.walk(tree):
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
-                any(_is_jit_decorator(d) for d in node.decorator_list):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if any(_is_jit_decorator(d) for d in node.decorator_list):
             out.extend(_violations_in(node, path))
+        if _is_dispatch_fn(node.name):
+            out.extend(_mr_array_in_loops(node, path))
     return out
 
 
@@ -120,7 +162,8 @@ def main() -> None:
         raise SystemExit(2)
     violations = lint(args.root)
     if violations:
-        print("lint_hot_path: host syncs inside compiled functions:")
+        print("lint_hot_path: hot-path violations (host syncs in "
+              "compiled bodies / per-WR MR fetches in dispatch loops):")
         for v in violations:
             print(f"  {v}")
         raise SystemExit(1)

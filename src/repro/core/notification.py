@@ -32,6 +32,35 @@ class RingFullError(RuntimeError):
     pass
 
 
+# Auto device-residency policy (measured, per backend): `Ring(device=
+# None)` — and `CompletionQueue(device_ring=None)` — resolve to a
+# device-resident ring when vectorized AND capacity >= this backend's
+# entry. The thresholds come from the line-rate crossover sweep
+# (`BENCH_line_rate.json` ring_xover rows, depth x publish_every): on
+# backends where "device" memory IS host memory (cpu, the interpret
+# rig) a jitted produce+consume never beats the two-slice-assignment
+# memcpy at ANY depth (device/host stays ~6-7x slower, flat across
+# 64..8192), so there is no crossover, the backend has no entry, and
+# auto resolves to a host ring. On TPU the cost being deleted is the
+# per-publish host->HBM descriptor copy; deep rings amortize the launch.
+# An explicit device=True/False kwarg always wins over this policy, and
+# vectorized=False (the oracle) never compiles regardless.
+DEVICE_RING_AUTO_DEPTH: dict[str, int] = {"tpu": 2048}
+
+_BACKEND: str | None = None
+
+
+def _auto_device(capacity: int, vectorized: bool) -> bool:
+    global _BACKEND
+    if not vectorized:
+        return False
+    if _BACKEND is None:        # backend probe once, not per ring
+        import jax
+        _BACKEND = jax.default_backend()
+    depth = DEVICE_RING_AUTO_DEPTH.get(_BACKEND)
+    return depth is not None and capacity >= depth
+
+
 class Ring:
     # registry-backed (repro.obs): each Ring instance still owns
     # independent values (the vectorized-vs-scalar bit-exactness tests
@@ -44,7 +73,7 @@ class Ring:
 
     def __init__(self, capacity: int, width: int = DESCRIPTOR_WIDTH,
                  publish_every: int = 8, vectorized: bool = True,
-                 metrics_parent=None, device: bool = False):
+                 metrics_parent=None, device: bool | None = None):
         assert capacity > 0
         metrics.instance_scope(self, "ring", indexed=True,
                                parent=metrics_parent)
@@ -55,7 +84,10 @@ class Ring:
         # device and lands each produce/consume in ONE jitted launch with
         # donated buffers (kernels/desc_ring). Head/tail/credit/publish
         # bookkeeping stays host-side and identical — the protocol does
-        # not change, only where the slot memcpy runs.
+        # not change, only where the slot memcpy runs. device=None defers
+        # to the measured depth policy (`DEVICE_RING_AUTO_DEPTH`).
+        if device is None:
+            device = _auto_device(capacity, vectorized)
         self.device = device
         if device:
             if not vectorized:
@@ -216,6 +248,51 @@ class Ring:
                 self._published_tail = self.tail
                 self._since_publish = 0
         return np.stack(out) if out else np.zeros((0, self.width), np.int64)
+
+    def produce_consume(self, batch: np.ndarray,
+                        max_n: int | None = None) -> np.ndarray:
+        """Fused publish+poll for a DEVICE ring: produce `batch` and
+        drain the valid prefix in ONE donated launch (kernels/desc_ring
+        `produce_consume`) — the serve engine's one-launch step rides
+        this through `CompletionQueue.enable_fused_poll`. Head/tail/
+        credit/publish bookkeeping is identical to `produce(batch)`
+        followed by `consume(max_n)`; only the launch count differs
+        (1, not 2). Returns the drained (k, width) descriptor block."""
+        if not self.device:
+            raise ValueError("produce_consume requires a device ring")
+        batch = np.atleast_2d(np.asarray(batch, np.int64))
+        if batch.size == 0:
+            batch = np.zeros((0, self.width), np.int64)
+        n = batch.shape[0]
+        if n and self._credit() < n:
+            self._producer_view = self._published_tail
+            self.dma_reads += 1
+            if self._credit() < n:
+                raise RingFullError(
+                    f"need {n} slots, have {self._credit()}")
+        limit = self.capacity if max_n is None \
+            else min(max_n, self.capacity)
+        limit = min(limit, self.head + n - self.tail)
+        if n == 0 and limit <= 0:
+            return np.zeros((0, self.width), np.int64)
+        self.slots, self.flags, out = self._ring_ops.produce_consume(
+            self.slots, self.flags, self.head, self.tail,
+            batch[:n], max(0, limit))
+        if n:
+            self.head += n
+            self.dma_writes += 1      # the whole batch rode one DMA
+            self.max_occupancy = max(self.max_occupancy,
+                                     self.head - self._published_tail)
+        k = out.shape[0]
+        if k:
+            self.tail += k
+            total = self._since_publish + k
+            if total >= self.publish_every:
+                self._since_publish = total % self.publish_every
+                self._published_tail = self.tail - self._since_publish
+            else:
+                self._since_publish = total
+        return out
 
     def force_publish(self):
         self._published_tail = self.tail

@@ -43,3 +43,13 @@ def consume(slots, flags, tail):
     ok = flags[s] == (1 - (idx // cap) % 2).astype(flags.dtype)
     k = jnp.where(ok.all(), cap, jnp.argmin(ok))
     return slots[s], k
+
+
+def produce_consume(slots, flags, batch, head, tail):
+    """Fused publish+poll: produce `batch` at head.. then scan/rotate
+    from `tail`, all inside ONE traced program (the serve engine's
+    one-launch step). Exactly `produce` composed with `consume` — the
+    consume sees the freshly produced flags, like the host sequence."""
+    slots, flags = produce(slots, flags, batch, head)
+    rows, k = consume(slots, flags, tail)
+    return slots, flags, rows, k

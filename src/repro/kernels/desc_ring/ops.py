@@ -33,6 +33,11 @@ def _consume(slots, flags, tail):
     return desc_ring.consume(slots, flags, tail)
 
 
+@partial(compat.jit, donate_argnums=(0, 1))
+def _produce_consume(slots, flags, batch, head, tail):
+    return desc_ring.produce_consume(slots, flags, batch, head, tail)
+
+
 def _count():
     metrics.get_registry().scope("fused").counter("ring_launches").inc()
 
@@ -61,3 +66,21 @@ def consume(slots, flags, tail: int, limit: int) -> np.ndarray:
     if k == 0:
         return np.empty((0, slots.shape[1] // 2), np.int64)
     return np.ascontiguousarray(np.asarray(rows[:k])).view(np.int64)
+
+
+def produce_consume(slots, flags, head: int, tail: int,
+                    batch: np.ndarray, limit: int):
+    """Fused publish+poll: ONE donated launch producing the host int64
+    batch AND scanning the valid prefix from tail. Returns (slots',
+    flags', up-to-`limit` host int64 rows) — exactly `produce` then
+    `consume`, for half the launches (the one-launch serve step)."""
+    cap = slots.shape[0]
+    b32 = np.ascontiguousarray(batch, np.int64).view(np.int32)
+    _count()
+    slots, flags, rows, k = _produce_consume(
+        slots, flags, b32, head % (2 * cap), tail % (2 * cap))
+    k = min(int(k), limit)
+    if k == 0:
+        return slots, flags, np.empty((0, slots.shape[1] // 2), np.int64)
+    return slots, flags, \
+        np.ascontiguousarray(np.asarray(rows[:k])).view(np.int64)

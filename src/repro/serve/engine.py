@@ -45,7 +45,8 @@ class ServeEngine:
 
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_seq: int = 256, ring_capacity: int = 64,
-                 vectorized: bool = True, fabric=None):
+                 vectorized: bool = True, fabric=None,
+                 device_ring: bool | None = None):
         metrics.instance_scope(self, "serve", indexed=True)
         self.requests_submitted = 0
         self.srq_refills = 0
@@ -75,17 +76,27 @@ class ServeEngine:
             verbs.Fabric(vectorized=vectorized)
         self.srq = self.fabric.shared_srq(max_wr=max(256, 4 * max_batch))
         self.fabric.on_srq_limit(self._refill_srq)
+        # device_ring=None defers each CQ to the measured auto policy
+        # (core.notification.DEVICE_RING_AUTO_DEPTH); device_ring=True
+        # pins the submit ring device-resident AND arms the fused
+        # publish+poll, making an active serving step ONE donated
+        # produce_consume launch end to end (submits are unsignaled
+        # inline SENDs, so the submit side is launch-free)
         cm = self.fabric.node(self.fabric.gids[0])
         self._listen_addr = cm.listen(depth=ring_capacity,
                                       max_wr=max(256, 2 * max_batch),
                                       srq="fabric",
-                                      on_disconnect=self._client_lost)
+                                      on_disconnect=self._client_lost,
+                                      device_ring=device_ring)
         self.ep = self.fabric.connect(self._listen_addr,
                                       src_gid=self.fabric.gids[0],
                                       depth=ring_capacity,
-                                      max_wr=max(256, 2 * max_batch))
+                                      max_wr=max(256, 2 * max_batch),
+                                      device_ring=device_ring)
         self._refill_srq(self.srq)
         self.ring = self.ep.peer.recv_cq.ring       # the T3 header pipe
+        if self.ring.device:
+            self.ep.peer.recv_cq.enable_fused_poll()
         self.pinned_prompts: dict[int, np.ndarray] = {}   # payload table
         self.requests: dict[int, Request] = {}
         self.slots: list[int | None] = [None] * max_batch
@@ -212,7 +223,10 @@ class ServeEngine:
 
     def run_until_done(self, max_iters: int = 1000):
         for _ in range(max_iters):
-            if not self.step() and not len(self.ring):
+            # the CQ length counts ring occupancy PLUS staged CQEs —
+            # under fused poll a flush defers staging to the next poll,
+            # so len(self.ring) alone would miss pending work
+            if not self.step() and not len(self.ep.peer.recv_cq):
                 if all(r.done for r in self.requests.values()):
                     break
         return {rid: r.out_tokens for rid, r in self.requests.items()}

@@ -18,8 +18,8 @@ from repro.verbs.qp import (ENOMEMError, QPState, QPStateError, QueuePair,
                             RecvWR, SendWR)
 from repro.verbs.ratectl import RateController
 from repro.verbs.srq import SharedReceiveQueue
-from repro.verbs.transport import (LoopbackTransport, MeshTransport,
-                                   VerbsPair, connect)
+from repro.verbs.transport import (SCALAR_DISPATCH_MAX, LoopbackTransport,
+                                   MeshTransport, VerbsPair, connect)
 from repro.verbs.wqe import (IBV_WC_ACCESS_ERR, IBV_WC_RECV, IBV_WC_RNR_ERR,
                              IBV_WC_RETRY_EXC_ERR, IBV_WC_SUCCESS,
                              IBV_WC_WR_FLUSH_ERR,
@@ -33,7 +33,8 @@ __all__ = [
     "MemoryRegion", "ProtectionDomain",
     "ENOMEMError", "QPState", "QPStateError", "QueuePair", "RecvWR",
     "SendWR", "SharedReceiveQueue",
-    "LoopbackTransport", "MeshTransport", "VerbsPair", "connect",
+    "SCALAR_DISPATCH_MAX", "LoopbackTransport", "MeshTransport",
+    "VerbsPair", "connect",
     "IBV_WC_ACCESS_ERR", "IBV_WC_RECV", "IBV_WC_RNR_ERR",
     "IBV_WC_RETRY_EXC_ERR", "IBV_WC_SUCCESS", "IBV_WC_WR_FLUSH_ERR",
     "IBV_WR_RDMA_READ", "IBV_WR_RDMA_WRITE", "IBV_WR_SEND",

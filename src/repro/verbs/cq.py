@@ -49,18 +49,27 @@ class CompletionQueue:
     fc_reserved = metrics.gauge_attr()
 
     def __init__(self, depth: int = 256, publish_every: int = 8,
-                 vectorized: bool = True, *, device_ring: bool = False):
+                 vectorized: bool = True, *,
+                 device_ring: bool | None = None):
         metrics.instance_scope(self, "cq", indexed=True)
         self.vectorized = vectorized
         # device_ring=True publishes CQEs into a device-resident ring:
         # each flush's staged block lands in ONE jitted, donated produce
-        # launch (kernels/desc_ring) instead of a host memcpy. Opt-in,
-        # vectorized-only — the oracle never compiles.
+        # launch (kernels/desc_ring) instead of a host memcpy.
+        # Vectorized-only — the oracle never compiles. device_ring=None
+        # (the default) defers to the measured depth policy
+        # (`core.notification.DEVICE_RING_AUTO_DEPTH`): device-resident
+        # above the backend's crossover depth, host below it or on
+        # backends with no crossover; an explicit kwarg always wins.
         if device_ring and not vectorized:
             raise ValueError("device_ring requires vectorized=True")
         self.ring = Ring(depth, publish_every=publish_every,
                          vectorized=vectorized,
                          metrics_parent=self._metrics, device=device_ring)
+        # fused publish+poll (enable_fused_poll): flush() defers staged
+        # CQEs that fit the ring and poll() lands publish AND drain in
+        # ONE donated produce_consume launch. Opt-in, device-ring only.
+        self.fused_poll = False
         # staged CQEs live as ONE (n, width) block: staging a batch is an
         # array concat and publishing a chunk is a slice, never a python
         # loop over rows
@@ -98,6 +107,20 @@ class CompletionQueue:
 
     def fc_release(self):
         self.fc_reserved = max(0, self.fc_reserved - 1)
+
+    def enable_fused_poll(self):
+        """Fuse publish+poll: after this, `flush()` DEFERS staged CQEs
+        that fit the ring and the next `poll()` publishes AND drains
+        them in ONE donated `produce_consume` launch (kernels/desc_ring)
+        — the serve engine's one-launch step. Requires a device ring
+        (there is nothing to fuse on the host memcpy path). Completion
+        visibility is unchanged: every staged CQE was only ever
+        observable through poll(), which still delivers it."""
+        if not self.ring.device:
+            raise ValueError("fused poll requires a device ring "
+                             "(device_ring=True)")
+        self.fused_poll = True
+        return self
 
     # -- teardown -----------------------------------------------------------
     def reset(self):
@@ -158,6 +181,13 @@ class CompletionQueue:
         and retries); raises CQOverrunError only when the ring is full
         and nothing could be published."""
         from repro.core.notification import RingFullError
+        if self.fused_poll and \
+                0 < self._pending.shape[0] <= self.ring.free_slots():
+            # fused mode: staged CQEs that fit the ring ride the next
+            # poll's single produce_consume launch instead of paying a
+            # produce launch here. Oversized backlogs fall through to
+            # the chunked publish (ring credit still bounds staging).
+            return 0
         published = 0
         while self._pending.shape[0]:
             n = min(self._pending.shape[0], self.ring.free_slots())
@@ -189,15 +219,28 @@ class CompletionQueue:
         if out or len(self._pending):
             self.ring.force_publish()
         if len(self._pending) and (max_n is None or len(out) < max_n):
-            self.flush()                # backlog publishes into freed slots
-            out += self._drain(None if max_n is None else max_n - len(out))
+            want = None if max_n is None else max_n - len(out)
+            if self.fused_poll and \
+                    self._pending.shape[0] <= self.ring.free_slots():
+                # ONE donated launch publishes the staged block AND
+                # drains the valid prefix (ring empty in steady state,
+                # so the drain above cost zero launches): the serve
+                # engine's one-launch step
+                pending, self._pending = self._pending, self._pending[:0]
+                out += self._decode(self.ring.produce_consume(
+                    pending, want))
+            else:
+                self.flush()        # backlog publishes into freed slots
+                out += self._drain(want)
         if tr is not None and out:
             tr.complete("poll_cq", t0, cq=self._metrics.name,
                         cqes=len(out))
         return out
 
     def _drain(self, max_n: int | None) -> list[WorkCompletion]:
-        descs = self.ring.consume(max_n)
+        return self._decode(self.ring.consume(max_n))
+
+    def _decode(self, descs: np.ndarray) -> list[WorkCompletion]:
         if descs.shape[0] == 0:
             return []
         if self.vectorized:

@@ -128,6 +128,10 @@ class _Listener:
     flow_control: bool
     on_connect: Callable | None
     on_disconnect: Callable | None = None
+    # None defers per-CQ device residency to the measured auto policy
+    # (core.notification.DEVICE_RING_AUTO_DEPTH); accepted QPs' send CQs
+    # inherit this so both directions of a connection resolve alike
+    device_ring: bool | None = None
     accepted: list = field(default_factory=list)
 
 
@@ -249,7 +253,8 @@ class ConnectionManager:
                publish_every: int = 8, max_wr: int = 256,
                srq: Any = "fabric", flow_control: bool = False,
                on_connect: Callable | None = None,
-               on_disconnect: Callable | None = None) -> FabricAddress:
+               on_disconnect: Callable | None = None,
+               device_ring: bool | None = None) -> FabricAddress:
         """Register a listener and return its address. Accepted QPs share
         one recv CQ, and — with ``srq="fabric"`` (the default) — draw
         their landing buffers from the fabric-scope pool. Pass an SRQ
@@ -266,9 +271,10 @@ class ConnectionManager:
         pool = fabric.shared_srq() if srq == "fabric" else srq
         fabric._listeners[addr.qpn] = _Listener(
             self, service, addr,
-            CompletionQueue(depth, publish_every, fabric.vectorized),
+            CompletionQueue(depth, publish_every, fabric.vectorized,
+                            device_ring=device_ring),
             depth, publish_every, max_wr, pool, flow_control, on_connect,
-            on_disconnect)
+            on_disconnect, device_ring=device_ring)
         if service is not None:
             fabric._services[service] = addr
         return addr
@@ -282,7 +288,8 @@ class ConnectionManager:
 
     def connect(self, addr, *, depth: int = 512, publish_every: int = 8,
                 max_wr: int = 256, flow_control: bool = False,
-                on_disconnect: Callable | None = None) -> FabricEndpoint:
+                on_disconnect: Callable | None = None,
+                device_ring: bool | None = None) -> FabricEndpoint:
         """rdma_connect: mint a client QP here, accept a server QP at
         `addr` (a listener address, a service name, or a bare addressed
         QP still in RESET) and drive BOTH through the RC ladder. The
@@ -305,8 +312,10 @@ class ConnectionManager:
         # the context table)
         server, listener = fabric._accept(addr)
         qp = QueuePair(self.pd,
-                       CompletionQueue(depth, publish_every, vec),
-                       CompletionQueue(depth, publish_every, vec),
+                       CompletionQueue(depth, publish_every, vec,
+                                       device_ring=device_ring),
+                       CompletionQueue(depth, publish_every, vec,
+                                       device_ring=device_ring),
                        max_send_wr=max_wr, max_recv_wr=max_wr,
                        flow_control=flow_control, vectorized=vec)
         fabric._register(qp, self.gid)
@@ -512,7 +521,8 @@ class Fabric(MeshTransport):
             vec = self.vectorized
             sqp = QueuePair(
                 lst.cm.pd,
-                CompletionQueue(lst.depth, lst.publish_every, vec),
+                CompletionQueue(lst.depth, lst.publish_every, vec,
+                                device_ring=lst.device_ring),
                 lst.recv_cq, max_send_wr=lst.max_wr,
                 max_recv_wr=lst.max_wr, srq=lst.srq,
                 flow_control=lst.flow_control, vectorized=vec)
@@ -709,20 +719,21 @@ class Fabric(MeshTransport):
             return x
         return jax.tree.map(hop, payload)
 
-    def _move_payload(self, qp: QueuePair, wr: SendWR):
+    def _lower_payload(self, qp: QueuePair, wr: SendWR, payload):
         """The wire follows the route: cross-POD payload trees ride the
         T1 striped ppermute (packet spraying, MeshTransport's lowering),
         intra-pod cross-device hops materialize on the destination
         device (`_device_hop`), and same-gid loopback moves by
-        reference."""
+        reference. Lowering is per-WR even when the extraction was the
+        fused MR-run gather (`_fused_mr_rows`)."""
         route = self.routes.get(qp.qp_num)
         src_gid = self.gid_of.get(qp.qp_num)
         if route is None or src_gid is None or route.gid == src_gid:
-            return self._wr_source(qp, wr)
+            return payload
         if route.pod == src_gid.split("/", 1)[0]:
             self.intra_pod_hops += 1
-            return self._device_hop(route.gid, self._wr_source(qp, wr))
-        return super()._move_payload(qp, wr)
+            return self._device_hop(route.gid, payload)
+        return super()._lower_payload(qp, wr, payload)
 
     def flush(self, *endpoints) -> int:
         """ONE dispatch pass over many endpoints (the multi-destination

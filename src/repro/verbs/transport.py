@@ -14,6 +14,10 @@ run costs O(1) python/launch overhead —
   * a run of RDMA_WRITEs into one remote MR submits ONE stacked DMA;
   * a run of SENDs into an SRQ claims its recv WRs with ONE
     `take_many`;
+  * MR-sourced payloads (SEND or WRITE sources with payload=None and
+    mr+offsets) extract with ONE fused `gather_records` launch per
+    same-local-MR segment (`_fused_mr_rows`), not a per-WR
+    `pd.mr_array` + device index;
   * every RDMA_READ posted in the pass coalesces into one fused gather
     per remote region (`QPContext._flush`);
   * every completion of the pass is encoded per-CQ in ONE
@@ -35,6 +39,7 @@ import numpy as np
 from repro.core import tx_engine
 from repro.core.descriptors import TransferPlan
 from repro.core.offload_engine import dedupe_last_wins
+from repro.kernels.wr_scatter import ops as wr_scatter_ops
 from repro.obs import metrics, trace
 from repro.verbs import wqe
 from repro.verbs.cq import CompletionQueue
@@ -145,9 +150,17 @@ class LoopbackTransport:
         arr = qp.pd.mr_array(wr.mr)
         return jnp.asarray(arr)[np.asarray(wr.offsets).ravel()]
 
+    def _lower_payload(self, qp: QueuePair, wr: SendWR, payload):
+        """Hook: how an ALREADY-EXTRACTED payload crosses the wire
+        (identity on loopback). Split from `_wr_source` so the fused
+        MR-run gather can extract a whole run's payloads in ONE launch
+        and still give the transport its per-WR wire lowering."""
+        return payload
+
     def _move_payload(self, qp: QueuePair, wr: SendWR):
-        """Hook: how a non-inline payload crosses the wire."""
-        return self._wr_source(qp, wr)
+        """Hook: how a non-inline payload crosses the wire — extraction
+        (`_wr_source`) then wire lowering (`_lower_payload`)."""
+        return self._lower_payload(qp, wr, self._wr_source(qp, wr))
 
     @staticmethod
     def _remote_mr(peer: QueuePair, rkey: int) -> MemoryRegion | None:
@@ -383,6 +396,65 @@ class LoopbackTransport:
                 return None
         return wqe.unpack_inline_batch(block[j0:j0 + len(run)], nb, dc)
 
+    @staticmethod
+    def _fused_mr_rows(qp, run):
+        """Fused extraction for the MR-sourced WRs of one claimed run:
+        maximal segments of consecutive WRs sourcing from the SAME local
+        MR (payload=None, mr+offsets — the NIC-DMA-reads-the-source
+        contract) gather through ONE `gather_records` launch per segment
+        and ONE host conversion, instead of a per-WR `pd.mr_array` +
+        device index each. Returns a run-aligned list whose fused
+        positions hold the (k, *rec) numpy row blocks (bit-exact with
+        the oracle's per-WR gather — same region, same offsets, no
+        region mutation can interleave because every DMA of the pass
+        queues until settle) and None elsewhere; or None when nothing
+        fuses. A WR whose offsets don't normalize stays un-fused so it
+        fails on the per-WR path at exactly the oracle's position."""
+        n = len(run)
+        mrs: list = [None] * n
+        offs: list = [None] * n
+        fusable = 0
+        for i, ps in enumerate(run):
+            wr = ps.wr
+            if ps.inline_row is not None or ps.inline_src is not None \
+                    or wr.payload is not None or wr.mr is None:
+                continue
+            try:
+                off = np.asarray(wr.offsets, np.int64).ravel()
+            except Exception:
+                continue
+            if off.size:
+                mrs[i] = wr.mr
+                offs[i] = off
+                fusable += 1
+        if fusable < 2:
+            return None
+        rows = None
+        i = 0
+        while i < n:
+            mr = mrs[i]
+            j = i + 1
+            while mr is not None and j < n and mrs[j] is mr:
+                j += 1
+            if mr is not None and j - i >= 2:
+                if rows is None:
+                    rows = [None] * n
+                seg = offs[i:j]
+                cat = np.concatenate(seg)
+                # ONE region fetch + ONE fused gather launch + ONE host
+                # conversion for the whole segment
+                block = wr_scatter_ops.gather_records(
+                    qp.pd.mr_array(mr), cat, int(mr.record))
+                host = np.asarray(block[:cat.size])
+                rec_shape = tuple(mr.shape[1:])
+                p = 0
+                for k, off in zip(range(i, j), seg):
+                    rows[k] = host[p:p + off.size].reshape(
+                        (off.size,) + rec_shape)
+                    p += off.size
+            i = j
+        return rows
+
     def _run_custom(self, qp, peer, ps, stage) -> int:
         # escape hatch: dispatch into the peer's offload engine
         wr = ps.wr
@@ -460,6 +532,12 @@ class LoopbackTransport:
 
         claimed = run[:len(rwrs)] if len(rwrs) < n else run
         rows = self._batch_inline(claimed) if len(rwrs) > 1 else None
+        # MR-sourced payloads of the claimed run gather fused (ONE
+        # launch per same-MR segment); the same block feeds the same-CQ
+        # per-WR ordering fallback below, so that fallback costs CQE
+        # ordering only — never a second host extraction pass
+        mr_rows = None if rows is not None or len(rwrs) <= 1 else \
+            self._fused_mr_rows(qp, claimed)
         if rows is not None and all(rwr.mr is None for rwr in rwrs):
             # pure sideband inline run (the serve/submit hot path):
             # payloads are already unpacked and nothing between here and
@@ -483,6 +561,11 @@ class LoopbackTransport:
                 if rows is not None:
                     payload = rows[pos]
                     nbytes = ps.inline_nbytes
+                elif mr_rows is not None and mr_rows[pos] is not None:
+                    # pre-gathered block row: by-reference move, the wire
+                    # lowering (spec_tree / fabric routing) still per-WR
+                    payload = self._lower_payload(qp, ps.wr, mr_rows[pos])
+                    nbytes = 0
                 else:
                     payload, nbytes = self._wr_payload(qp, ps)
                 off = buf = None
@@ -642,10 +725,19 @@ class LoopbackTransport:
                 # numpy-first: a variadic device concatenate over
                 # thousands of tiny operands costs more than the scatter
                 # it feeds — the ONE device conversion is submit_dma's.
+                # MR-sourced WRITEs fuse their source extraction the
+                # same way as SENDs: one gather launch per same-local-MR
+                # segment instead of a per-WR `pd.mr_array` + index.
                 rec_shape = tuple(mr.shape[1:])
+                mr_rows = self._fused_mr_rows(qp, sub) \
+                    if len(sub) > 1 else None
                 srcs = [(ps, np.asarray(ps.wr.remote_offsets).ravel(),
-                         np.asarray(self._wr_source(qp, ps.wr))
-                         .reshape((-1,) + rec_shape)) for ps in sub]
+                         np.asarray(
+                             mr_rows[pos] if mr_rows is not None
+                             and mr_rows[pos] is not None
+                             else self._wr_source(qp, ps.wr))
+                         .reshape((-1,) + rec_shape))
+                        for pos, ps in enumerate(sub)]
                 # infallible phase: stack, submit, stage. A WR whose
                 # source rows don't match its offset count (a
                 # broadcasting WRITE) keeps its own DMA.
@@ -807,8 +899,7 @@ class MeshTransport(LoopbackTransport):
         self.staged = staged
         self.wire_sends = 0
 
-    def _move_payload(self, qp: QueuePair, wr: SendWR):
-        payload = self._wr_source(qp, wr)
+    def _lower_payload(self, qp: QueuePair, wr: SendWR, payload):
         if wr.spec_tree is None:
             return payload
         self.wire_sends += 1
