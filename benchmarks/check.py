@@ -54,11 +54,27 @@ HEADLINES = {
               "errors": "lower", "replays": "higher",
               "reresolutions": "higher", "ecn_marks": "higher",
               "converged": "higher", "wrs_per_s": "higher"},
+    # ISSUE 10: the serving-cluster contracts. desc_dmas_per_token and
+    # launches_per_page_run are deterministic verbs counters (the bench
+    # also hard-asserts flatness / == 1.0); prefill_compiles keeps the
+    # bucketed jit cache at its O(log max_seq) budget; bitexact=1 and
+    # failovers>=1 keep the seeded-kill row honest. tokens_per_s rows
+    # are wall clock — warn 20%, fail 50%.
+    "serve_cluster": {"tokens_per_s": "higher",
+                      "per_session_tokens_per_s": "higher",
+                      "desc_dmas_per_token": "lower",
+                      "launches_per_page_run": "lower",
+                      "doorbells_per_migration": "lower",
+                      "desc_dmas_per_migration": "lower",
+                      "prefill_compiles": "lower",
+                      "bitexact": "higher",
+                      "failovers": "higher"},
 }
 # speedup_vs_scalar is a ratio of two wall clocks: steadier than either
 # alone, but still rig weather — warn at 20%, fail at 50% like wrs_per_s
 # (the bench itself hard-asserts >= 1.0x at every chain length).
-WALL_METRICS = {"wrs_per_s", "speedup_vs_scalar"}
+WALL_METRICS = {"wrs_per_s", "speedup_vs_scalar", "tokens_per_s",
+                "per_session_tokens_per_s"}
 TOLERANCE = 0.20            # counters: deterministic, hard bar
 WALL_TOLERANCE = 0.50       # wall clock: warn past 20%, fail past 50%
 COUNTER_SLACK = 2           # absolute slack for near-zero registry counts

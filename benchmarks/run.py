@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.bench_fabric",         # ISSUE 5: routed multi-pod fabric
     "benchmarks.bench_moe_dispatch",   # Table 1 / §5.3 training-plane
     "benchmarks.bench_fault",          # ISSUE 8: unreliable fabric
+    "benchmarks.bench_serve_cluster",  # ISSUE 10: disaggregated serving
 ]
 
 

@@ -27,6 +27,7 @@ W_SEQ = 7
 OP_NOOP = 0
 OP_KV_WRITE = 1               # payload -> paged KV cache slot
 OP_KV_READ = 2
+OP_KV_ACTIVATE = 3            # migrated pages -> live decode slot
 OP_BATCH_READ = 0x1234        # paper Listing 1 example opcode
 OP_LIST_TRAVERSAL = 0x1235
 OP_BLOCK_READ_4K = 0x1240     # Solar block-storage analogue

@@ -64,11 +64,13 @@ class KVTransferEngine:
 
     transfers_replayed = metrics.counter_attr()
     route_reresolutions = metrics.counter_attr()
+    pages_migrated = metrics.counter_attr()
 
     def __init__(self, model, batch: int, seq_len: int,
                  plan: TransferPlan | None = None, *,
                  vectorized: bool = True, fabric=None,
-                 replay_limit: int = 3):
+                 replay_limit: int = 3, src_gid: str | None = None,
+                 decode_gids: list[str] | None = None):
         metrics.instance_scope(self, "kvtransfer", indexed=True)
         self.model = model
         self.plan = plan or TransferPlan()
@@ -76,6 +78,7 @@ class KVTransferEngine:
         self.replay_limit = replay_limit
         self.transfers_replayed = 0
         self.route_reresolutions = 0
+        self.pages_migrated = 0
         # decode-side landing buffers come from the FABRIC-scope shared
         # pool (one SRQ + one watermark for every tenant on the fabric)
         # and the prefill sender runs under CQ-credit flow control: a
@@ -100,11 +103,14 @@ class KVTransferEngine:
                 stacklevel=2)
         # decode listeners: the primary on the LAST gid (the historical
         # decode pod) plus a standby on every other decode-capable gid
-        # (pods other than the prefill pod's) — the failover targets
-        self._prefill_gid = self.fabric.gids[0]
+        # (pods other than the prefill pod's) — the failover targets.
+        # `src_gid` / `decode_gids` pin the roles explicitly (a serving
+        # cluster with several prefill pods passes its own topology).
+        self._prefill_gid = src_gid or self.fabric.gids[0]
         prefill_pod = self._prefill_gid.split("/", 1)[0]
-        decode_gids = [g for g in self.fabric.gids
-                       if g.split("/", 1)[0] != prefill_pod]
+        if decode_gids is None:
+            decode_gids = [g for g in self.fabric.gids
+                           if g.split("/", 1)[0] != prefill_pod]
         if not decode_gids:                 # single-pod fabric (warned)
             decode_gids = [self.fabric.gids[-1]]
         self._listen_addrs = [
@@ -148,6 +154,86 @@ class KVTransferEngine:
         old.qp.destroy()
         self.route_reresolutions += 1
         self._connect_to(survivors[-1])
+
+    @property
+    def decode_gid(self) -> str:
+        """The gid of the decode listener currently connected (changes
+        on failover — `migrate_pages` retarget callbacks read it)."""
+        return self._listen_addrs[self._active].gid
+
+    def retarget(self, gid: str):
+        """Point the transfer connection at a specific decode listener
+        (a router placing a request on the least-loaded decode pod).
+        No-op when already connected there and healthy."""
+        if self.decode_gid == gid and not self._peer_lost:
+            return self
+        for i, a in enumerate(self._listen_addrs):
+            if a.gid == gid and self.fabric.alive(gid) \
+                    and a.qpn in self.fabric._listeners:
+                if self.ep.qp.qp_num in self.fabric.qps:
+                    self.fabric.disconnect(self.ep)
+                self._connect_to(i)
+                return self
+        raise verbs.QPStateError(f"no live decode listener at {gid!r}")
+
+    def _migrate_once(self, runs) -> bool:
+        """One attempt at a page migration: the whole run list posts as
+        ONE RDMA_WRITE chain (one doorbell, one descriptor-fetch DMA),
+        one WR *per page* so a run of pages from the same local MR is a
+        maximal same-MR segment for `_fused_mr_rows` — ONE
+        `gather_records` launch per leaf run on the source, and one
+        stacked scatter per leaf region at the peer context flush."""
+        if self._peer_lost:
+            return False
+        wrs = []
+        for mr, src_ids, rkey, dst_ids in runs:
+            src_ids = np.asarray(src_ids, np.int64).ravel()
+            dst_ids = np.asarray(dst_ids, np.int64).ravel()
+            for s, t in zip(src_ids, dst_ids):
+                self._wr_id += 1
+                wrs.append(verbs.SendWR(
+                    wr_id=self._wr_id, opcode=verbs.IBV_WR_RDMA_WRITE,
+                    mr=mr, offsets=np.asarray([s], np.int64),
+                    remote_key=int(rkey),
+                    remote_offsets=np.asarray([t], np.int64),
+                    signaled=True))
+        try:
+            self.ep.post_send(wrs)
+            self.ep.flush()
+        except verbs.QPStateError:
+            return False                    # peer (or connection) gone
+        if self._peer_lost:
+            self.ep.poll()                  # drain WR_FLUSH_ERR
+            return False
+        wcs = self.ep.poll()
+        return bool(wcs) and all(wc.ok for wc in wcs)
+
+    def migrate_pages(self, runs, *, retarget=None):
+        """Move KV pages pod->pod as one-sided RDMA_WRITEs.
+
+        `runs` is a list of ``(mr, src_page_ids, remote_key,
+        dst_page_ids)`` — local page-pool MR records written straight
+        into the decode pod's pool regions (no recv WRs, no payload
+        tree: cache state is DMA memory on both ends). On peer death the
+        route re-resolves exactly like `transfer()`; since the surviving
+        pod's pool has different rkeys/page ids, `retarget(decode_gid)`
+        must return the replacement run list (re-reserved on the
+        survivor) for the replay. Returns the gid the pages landed on."""
+        ok = self._migrate_once(runs)
+        replays = 0
+        while not ok:
+            if replays >= self.replay_limit:
+                raise verbs.QPStateError(
+                    f"page migration failed after {replays} replays")
+            self._failover()
+            self.transfers_replayed += 1
+            replays += 1
+            if retarget is not None:
+                runs = retarget(self.decode_gid)
+            ok = self._migrate_once(runs)
+        self.pages_migrated += sum(
+            int(np.asarray(r[1]).size) for r in runs)
+        return self.decode_gid
 
     def close(self):
         """Release every fabric registration this engine holds

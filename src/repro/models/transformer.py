@@ -565,16 +565,27 @@ class DecoderLM:
         table = params["embed"] if cfg.tie_embeddings else params["out_embed"]
         return softcap(unembed(table, z), cfg.logit_softcap)
 
-    def prefill(self, params, tokens, *, embeddings=None):
+    def prefill(self, params, tokens, *, embeddings=None, last_pos=None):
         """Full-sequence forward that emits the decode cache.
 
-        Returns (last_token_logits (B,1,V), caches)."""
+        Returns (last_token_logits (B,1,V), caches). `last_pos` (B,)
+        selects which row's logits are "last" — the real prompt end when
+        `tokens` is right-padded to a bucketed length. Rows at positions
+        <= last_pos never see the pad rows (causal masking adds exact
+        zeros for fully-masked chunks), so the selected logits — and the
+        cache rows a later decode step attends to — are bit-exact with an
+        unpadded prefill."""
         cfg = self.cfg
         B, S = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         x = self._embed_in(params, tokens, embeddings)
         x, _, caches = self._run_groups(params, x, positions, mode="prefill")
-        h = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps,
+        if last_pos is None:
+            x_last = x[:, -1:]
+        else:
+            lp = jnp.asarray(last_pos, jnp.int32).reshape(B, 1)
+            x_last = jnp.take_along_axis(x, lp[:, :, None], axis=1)
+        h = rmsnorm(params["final_norm"], x_last, cfg.norm_eps,
                     zero_centered=cfg.zero_centered_norm)
         table = params["embed"] if cfg.tie_embeddings else params["out_embed"]
         logits = softcap(unembed(table, h), cfg.logit_softcap)

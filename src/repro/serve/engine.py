@@ -10,6 +10,22 @@ Request flow (the FlexiNS verbs path, through `repro.verbs`):
               T3 notification ring, drained batched — prefills new
               requests, and runs one batched decode step across all
               active slots with per-slot positions (continuous batching).
+
+ISSUE 10 makes the cache itself DMA memory: when the model is
+`pageable`, the dense per-slot cache becomes a `PagePool` of MR-backed
+KV pages and the decode step reads them through a slot -> page-table
+indirection (`make_paged_step`). That turns the engine into a decode
+*pod*: a prefill pod `reserve()`s pages here, RDMA_WRITEs them straight
+into the pool (`KVTransferEngine.migrate_pages`) and goes live with an
+OP_KV_ACTIVATE descriptor on the same notification ring submits use.
+Prompt lengths are bucketed to powers of two (`bucketable` models) so
+the prefill jit cache stays O(log max_seq) deep — `prefill_compiles`
+counts actual compilations.
+
+Finished requests leave the engine: their slot pages are freed and the
+`requests` / `pinned_prompts` entries deleted at retire time (and in
+`close()`); the output tokens move to `_finished`, which the caller
+owns via `run_until_done()`'s return value.
 """
 from __future__ import annotations
 
@@ -20,9 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import verbs
-from repro.core.descriptors import make_descriptor, OP_KV_WRITE
+from repro.core.descriptors import (make_descriptor, OP_KV_ACTIVATE,
+                                    OP_KV_WRITE)
 from repro.obs import metrics
 from repro.serve.kvcache import pad_caches
+from repro.serve.paged import (PagePool, bucket_len, bucketable,
+                               make_paged_step, pageable)
 
 
 @dataclass
@@ -37,20 +56,25 @@ class Request:
 class ServeEngine:
     # per-tenant telemetry (`serve{i}/...` in the registry): requests
     # posted through the verbs client side, pool refills the SRQ
-    # watermark doorbell triggered, and connected clients the fabric
-    # reported dead (the listener's CM DISCONNECTED event)
+    # watermark doorbell triggered, connected clients the fabric
+    # reported dead (the listener's CM DISCONNECTED event), and actual
+    # prefill compilations (distinct padded lengths seen)
     requests_submitted = metrics.counter_attr()
     srq_refills = metrics.counter_attr()
     client_disconnects = metrics.counter_attr()
+    prefill_compiles = metrics.counter_attr()
 
     def __init__(self, model, params, *, max_batch: int = 4,
                  max_seq: int = 256, ring_capacity: int = 64,
                  vectorized: bool = True, fabric=None,
-                 device_ring: bool | None = None):
+                 device_ring: bool | None = None, gid: str | None = None,
+                 service: str | None = None, paged: bool | None = None,
+                 page_tokens: int = 16):
         metrics.instance_scope(self, "serve", indexed=True)
         self.requests_submitted = 0
         self.srq_refills = 0
         self.client_disconnects = 0
+        self.prefill_compiles = 0
         # levels are owned by engine state — sample, don't mirror
         metrics.weak_probe(self._metrics, "slots_active", self,
                            lambda e: sum(1 for s in e.slots
@@ -82,14 +106,18 @@ class ServeEngine:
         # publish+poll, making an active serving step ONE donated
         # produce_consume launch end to end (submits are unsignaled
         # inline SENDs, so the submit side is launch-free)
-        cm = self.fabric.node(self.fabric.gids[0])
-        self._listen_addr = cm.listen(depth=ring_capacity,
+        self.gid = gid or self.fabric.gids[0]
+        cm = self.fabric.node(self.gid)
+        # `service` publishes the listener for `fabric.discover()` — a
+        # front-end Router finds decode pods by name, not by object
+        self._listen_addr = cm.listen(service=service,
+                                      depth=ring_capacity,
                                       max_wr=max(256, 2 * max_batch),
                                       srq="fabric",
                                       on_disconnect=self._client_lost,
                                       device_ring=device_ring)
         self.ep = self.fabric.connect(self._listen_addr,
-                                      src_gid=self.fabric.gids[0],
+                                      src_gid=self.gid,
                                       depth=ring_capacity,
                                       max_wr=max(256, 2 * max_batch),
                                       device_ring=device_ring)
@@ -99,22 +127,44 @@ class ServeEngine:
             self.ep.peer.recv_cq.enable_fused_poll()
         self.pinned_prompts: dict[int, np.ndarray] = {}   # payload table
         self.requests: dict[int, Request] = {}
+        self._finished: dict[int, list] = {}
+        self._reserved: dict[int, tuple] = {}       # rid -> pre-admitted
         self.slots: list[int | None] = [None] * max_batch
-        self.caches = model.init_cache(max_batch, max_seq)
         self.positions = np.zeros((max_batch,), np.int32)
         self._next_id = 0
+        self._seen_prefill_lens: set[int] = set()
+        self.paged = pageable(model) if paged is None else paged
+        self.bucketed = bucketable(model)
+        if self.paged:
+            # cache state on this pod's protection domain: one MR per
+            # cache leaf, record = one page — remotely addressable
+            self.pool = PagePool(model, cm.pd, max_batch=max_batch,
+                                 max_seq=max_seq, page_tokens=page_tokens)
+            self._paged_step = make_paged_step(model, self.pool)
+            self.caches = None
+        else:
+            self.pool = None
+            self.caches = model.init_cache(max_batch, max_seq)
         self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
 
     def close(self):
         """Release every registration this engine holds on the fabric
-        (listener, both QPs, routes, SRQ membership, and the refill
-        doorbell — which would otherwise keep firing AND pin the whole
-        engine alive through its closure): a short-lived engine on a
-        long-lived shared fabric must leak nothing."""
+        (listener, both QPs, routes, SRQ membership, the page-pool MRs,
+        and the refill doorbell — which would otherwise keep firing AND
+        pin the whole engine alive through its closure): a short-lived
+        engine on a long-lived shared fabric must leak nothing."""
         self.srq.remove_on_limit(self._refill_srq)
-        self.fabric.unlisten(self._listen_addr)
-        self.fabric.disconnect(self.ep)
+        if self._listen_addr.qpn in self.fabric._listeners:
+            self.fabric.unlisten(self._listen_addr)
+        if self.ep.qp.qp_num in self.fabric.qps:
+            self.fabric.disconnect(self.ep)
+        if self.paged:
+            self.pool.close()
+        self.pinned_prompts.clear()
+        self.requests.clear()
+        self._finished.clear()
+        self._reserved.clear()
         return self
 
     # -- client side --------------------------------------------------------
@@ -153,12 +203,67 @@ class ServeEngine:
             verbs.SendWR(wr_id=int(d[1]), payload=np.asarray(d, np.int64),
                          inline=True, signaled=False) for d in descs])
 
+    # -- disaggregated admission (decode-pod side) ----------------------
+    def reserve(self, rid: int, prompt_len: int, max_new_tokens: int,
+                first_token: int) -> list[tuple]:
+        """Decode-side half of a disaggregated admit: allocate the
+        request's pages up front and hand back the migration lease —
+        per-leaf ``(rkey, page_ids)`` — that the prefill pod's
+        RDMA_WRITEs target. The request goes live (binds a slot) only
+        when its OP_KV_ACTIVATE descriptor arrives, i.e. after the
+        pages have landed."""
+        assert self.paged, "reserve() requires the paged KV pool"
+        n = min(self.pool.pages_for(prompt_len + max_new_tokens + 1),
+                self.pool.pages_per_slot)
+        ids = self.pool.alloc(n)
+        self._reserved[rid] = (ids, prompt_len, max_new_tokens,
+                               int(first_token))
+        return self.pool.lease(ids[:self.pool.pages_for(prompt_len)])
+
+    def _activate(self, slot: int, rid: int):
+        """OP_KV_ACTIVATE arrived: the reserved pages now hold the
+        migrated prefill — bind them to a slot and start decoding. A
+        stale rid (re-reserved on another pod after a failover replay)
+        is dropped: the replacement activation carries the request."""
+        res = self._reserved.pop(rid, None)
+        if res is None:
+            return
+        ids, plen, max_new, first_tok = res
+        req = Request(rid, [], max_new)
+        req.out_tokens.append(first_tok)
+        self.requests[rid] = req
+        self.pool.bind_slot(slot, ids)
+        self.positions[slot] = plen - 1
+        self.slots[slot] = rid
+
     # -- engine side ----------------------------------------------------
     def _free_slot(self) -> int | None:
         for i, s in enumerate(self.slots):
             if s is None:
                 return i
         return None
+
+    def _run_prefill(self, prompt: np.ndarray):
+        """Prefill one prompt, padded to its power-of-two bucket when
+        the model allows (`bucketable`): the jit cache depth becomes
+        O(log max_seq) instead of one entry per distinct length, and
+        `last_pos` keeps the first sampled token bit-exact. Returns
+        (logits, caches, padded_len)."""
+        plen = int(prompt.size)
+        pad = bucket_len(plen, self.max_seq) if self.bucketed else plen
+        if pad not in self._seen_prefill_lens:
+            self._seen_prefill_lens.add(pad)
+            self.prefill_compiles += 1
+        if self.bucketed:
+            padded = np.zeros((1, pad), np.int32)
+            padded[0, :plen] = prompt
+            logits, caches = self._prefill(
+                self.params, jnp.asarray(padded),
+                last_pos=jnp.asarray([plen - 1], jnp.int32))
+        else:
+            logits, caches = self._prefill(self.params,
+                                           jnp.asarray(prompt[None, :]))
+        return logits, caches, pad
 
     def _admit(self):
         # top up shared recv credits (the SRQ limit event normally does
@@ -170,7 +275,6 @@ class ServeEngine:
         self.ep.flush()
         pending = [wc.data for wc in self.ep.peer.recv_cq.poll()]
         for i, d in enumerate(pending):
-            rid = int(d[1])
             slot = self._free_slot()
             if slot is None:
                 # re-post EVERY remaining drained descriptor as ONE
@@ -179,15 +283,30 @@ class ServeEngine:
                 self._post_descriptor([np.asarray(d2)
                                        for d2 in pending[i:]])
                 break
-            req = self.requests[rid]
-            prompt = self.pinned_prompts[rid][None, :]       # (1, P)
-            logits, caches = self._prefill(self.params,
-                                           jnp.asarray(prompt))
-            caches = pad_caches(caches, prompt.shape[1], self.max_seq)
-            tok = int(jnp.argmax(logits[0, -1]))
-            req.out_tokens.append(tok)
-            self._install(slot, caches, prompt.shape[1])
-            self.slots[slot] = rid
+            if int(d[0]) == OP_KV_ACTIVATE:
+                self._activate(slot, int(d[1]))
+            else:
+                self._admit_local(slot, int(d[1]))
+
+    def _admit_local(self, slot: int, rid: int):
+        """Same-pod admission: prefill here, land the caches in this
+        pod's own pool (paged) or dense slot."""
+        req = self.requests[rid]
+        prompt = self.pinned_prompts[rid]
+        plen = int(prompt.size)
+        logits, caches, padded = self._run_prefill(prompt)
+        req.out_tokens.append(int(jnp.argmax(logits[0, -1])))
+        if self.paged:
+            n = min(self.pool.pages_for(plen + req.max_new_tokens + 1),
+                    self.pool.pages_per_slot)
+            ids = self.pool.alloc(n)
+            self.pool.fill(ids[:self.pool.pages_for(plen)], caches)
+            self.pool.bind_slot(slot, ids)
+            self.positions[slot] = plen - 1
+        else:
+            caches = pad_caches(caches, padded, self.max_seq)
+            self._install(slot, caches, plen)
+        self.slots[slot] = rid
 
     def _install(self, slot: int, caches, prompt_len: int):
         def put(dst, src):
@@ -207,8 +326,17 @@ class ServeEngine:
         for i in active:
             tokens[i, 0] = self.requests[self.slots[i]].out_tokens[-1]
         pos = jnp.asarray(self.positions + 1)               # write index
-        logits, self.caches = self._decode(self.params, jnp.asarray(tokens),
-                                           self.caches, pos)
+        if self.paged:
+            # table-indirected decode: ONE jitted launch gathers pages,
+            # steps, and scatters the updated pages back; RDMA-migrated
+            # pages are picked up through the region arguments
+            logits, new_regions = self._paged_step(
+                self.params, jnp.asarray(tokens),
+                jnp.asarray(self.pool.table), pos, self.pool.regions())
+            self.pool.rebind(new_regions)
+        else:
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(tokens), self.caches, pos)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for i in active:
             rid = self.slots[i]
@@ -219,6 +347,13 @@ class ServeEngine:
                     self.positions[i] >= self.max_seq - 2:
                 req.done = True
                 self.slots[i] = None
+                if self.paged:
+                    self.pool.free(self.pool.clear_slot(i))
+                # retention fix: done requests leave the live dicts —
+                # results move to _finished, owned by the caller
+                self._finished[rid] = req.out_tokens
+                del self.requests[rid]
+                self.pinned_prompts.pop(rid, None)
         return len(active)
 
     def run_until_done(self, max_iters: int = 1000):
@@ -227,6 +362,8 @@ class ServeEngine:
             # under fused poll a flush defers staging to the next poll,
             # so len(self.ring) alone would miss pending work
             if not self.step() and not len(self.ep.peer.recv_cq):
-                if all(r.done for r in self.requests.values()):
+                if not self.requests:
                     break
-        return {rid: r.out_tokens for rid, r in self.requests.items()}
+        out = dict(self._finished)
+        out.update({rid: r.out_tokens for rid, r in self.requests.items()})
+        return out

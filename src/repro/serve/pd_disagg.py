@@ -14,9 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.descriptors import TransferPlan
+from repro import verbs
+from repro.core.descriptors import (make_descriptor, OP_KV_ACTIVATE,
+                                    TransferPlan)
 from repro.core.kvtransfer import KVTransferEngine
+from repro.obs import metrics
 from repro.serve.kvcache import PagedKVPool, pad_caches
+from repro.serve.paged import PagePool, bucket_len, bucketable, pageable
 
 
 class PDServer:
@@ -116,3 +120,156 @@ class PDServer:
         toks = self.ingest_and_decode(caches, first, plen, n_steps,
                                       use_kernel=use_kernel)
         return toks, stats
+
+
+class PrefillPod:
+    """One prefill pod of a disaggregated serving cluster (ISSUE 10).
+
+    The pod owns a single-slot staging `PagePool` on its OWN protection
+    domain: a prompt is prefilled here (bucketed to a power-of-two pad
+    when the model allows), its caches land in staged pages, and the
+    pages move to a decode pod as one-sided RDMA_WRITEs through
+    `KVTransferEngine.migrate_pages` — one WR per page, fusing to ONE
+    gather launch per cache leaf. The request then goes live with an
+    inline OP_KV_ACTIVATE descriptor SENT to the decode engine's own
+    notification ring (the same ring `submit()` uses), which is also the
+    admission-counted traffic a seeded `FaultModel.kill_after` can take
+    the decode pod down with mid-run: migration AND activation replay
+    through the surviving pod, re-reserving pages there first.
+
+    `reserve()` is called directly on the decode `ServeEngine` object —
+    the control-plane RPC of the real system, kept as a method call on
+    this in-process rig; the *data* plane (pages, activation) is all
+    verbs traffic.
+    """
+
+    prefill_compiles = metrics.counter_attr()
+    requests_processed = metrics.counter_attr()
+
+    def __init__(self, model, params, *, fabric, gid: str,
+                 decode_gids: list[str], max_seq: int = 256,
+                 page_tokens: int = 16):
+        metrics.instance_scope(self, "prefillpod", indexed=True)
+        assert pageable(model), "PrefillPod needs a pageable cache"
+        self.prefill_compiles = 0
+        self.requests_processed = 0
+        self.model = model
+        self.params = params
+        self.fabric = fabric
+        self.gid = gid
+        self.max_seq = max_seq
+        self.bucketed = bucketable(model)
+        self.pool = PagePool(model, fabric.node(gid).pd, max_batch=1,
+                             max_seq=max_seq, page_tokens=page_tokens)
+        self.kv = KVTransferEngine(model, 1, max_seq, fabric=fabric,
+                                   src_gid=gid, decode_gids=decode_gids)
+        self._prefill = jax.jit(model.prefill)
+        self._seen_lens: set[int] = set()
+        # per-decode-gid activation endpoints (to the ENGINE listeners,
+        # not the kv transfer listeners): gid -> (ep, lost-flag box)
+        self._act_eps: dict[str, tuple] = {}
+
+    def close(self):
+        for ep, _ in self._act_eps.values():
+            if ep.qp.qp_num in self.fabric.qps:
+                self.fabric.disconnect(ep)
+        self._act_eps.clear()
+        self.kv.close()
+        self.pool.close()
+        return self
+
+    def _run_prefill(self, prompt: np.ndarray):
+        plen = int(prompt.size)
+        pad = bucket_len(plen, self.max_seq) if self.bucketed else plen
+        if pad not in self._seen_lens:
+            self._seen_lens.add(pad)
+            self.prefill_compiles += 1
+        if self.bucketed:
+            padded = np.zeros((1, pad), np.int32)
+            padded[0, :plen] = prompt
+            return self._prefill(self.params, jnp.asarray(padded),
+                                 last_pos=jnp.asarray([plen - 1],
+                                                      jnp.int32))
+        return self._prefill(self.params, jnp.asarray(prompt[None, :]))
+
+    def _engine_ep(self, engine):
+        """The (cached) activation connection to a decode engine's
+        listener — made through the fabric address, like any client."""
+        ent = self._act_eps.get(engine.gid)
+        if ent is not None and (ent[1][0] or
+                                ent[0].qp.qp_num not in self.fabric.qps):
+            if ent[0].qp.qp_num in self.fabric.qps:
+                self.fabric.disconnect(ent[0])
+            self._act_eps.pop(engine.gid)
+            ent = None
+        if ent is None:
+            lost = [False]
+
+            def on_lost(_ep, lost=lost):
+                lost[0] = True
+            ep = self.fabric.connect(engine._listen_addr, src_gid=self.gid,
+                                     depth=64, on_disconnect=on_lost)
+            ent = self._act_eps[engine.gid] = (ep, lost)
+        return ent
+
+    def _activate_once(self, engine, rid: int, plen: int) -> bool:
+        """Send the go-live descriptor to the decode engine's ring. False
+        means the decode pod died before (or during — the kill-mid-flush
+        trigger) the SEND: the caller fails over and replays."""
+        ep, lost = self._engine_ep(engine)
+        if lost[0]:
+            return False
+        d = make_descriptor(OP_KV_ACTIVATE, src=rid, length=plen)
+        try:
+            ep.post_send(verbs.SendWR(wr_id=rid,
+                                      payload=np.asarray(d, np.int64),
+                                      inline=True, signaled=False))
+            ep.flush()
+        except verbs.QPStateError:
+            return False
+        if lost[0]:
+            ep.poll()                       # drain WR_FLUSH_ERR
+            return False
+        return True
+
+    def process(self, rid: int, prompt, max_new_tokens: int,
+                engines: dict, *, decode_gid: str | None = None) -> str:
+        """One disaggregated request end to end: prefill here, stage
+        pages, migrate them into the pages the chosen decode engine
+        `reserve()`d, activate. Returns the gid that owns the request
+        (the survivor, if the chosen pod died mid-flight)."""
+        prompt = np.asarray(prompt, np.int32).ravel()
+        plen = int(prompt.size)
+        logits, caches = self._run_prefill(prompt)
+        first_tok = int(jnp.argmax(logits[0, -1]))
+        src_ids = self.pool.alloc(self.pool.pages_for(plen))
+        self.pool.fill(src_ids, caches)
+        if decode_gid is not None:
+            self.kv.retarget(decode_gid)
+
+        def reserve_on(gid):
+            lease = engines[gid].reserve(rid, plen, max_new_tokens,
+                                         first_tok)
+            return [(mr, src_ids, rkey, dst_ids)
+                    for mr, (rkey, dst_ids) in zip(self.pool.mrs, lease)]
+
+        try:
+            runs = reserve_on(self.kv.decode_gid)
+            landed = self.kv.migrate_pages(runs, retarget=reserve_on)
+            for _ in range(self.kv.replay_limit + 1):
+                if self._activate_once(engines[landed], rid, plen):
+                    break
+                # pod died between migrate and activation: same replay
+                # as a mid-migrate death — survivor re-reserves, pages
+                # re-migrate, activation re-sends
+                self.kv._failover()
+                runs = reserve_on(self.kv.decode_gid)
+                landed = self.kv.migrate_pages(runs, retarget=reserve_on)
+            else:
+                raise verbs.QPStateError(
+                    f"request {rid}: activation failed after "
+                    f"{self.kv.replay_limit + 1} attempts")
+        finally:
+            self.pool.free(src_ids)
+        self.requests_processed += 1
+        return landed

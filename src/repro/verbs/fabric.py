@@ -649,6 +649,20 @@ class Fabric(MeshTransport):
             self._services.pop(lst.service, None)
         return self
 
+    def discover(self, prefix: str = "") -> dict[str, FabricAddress]:
+        """Service discovery for front-end routers: every LIVE named
+        listener whose service name starts with `prefix`, as
+        ``{service: address}``. A listener at a dead gid (or already
+        unlistened) is not offered — re-running discover after a
+        `kill_node` is how a router re-resolves its backend set."""
+        out: dict[str, FabricAddress] = {}
+        for service, addr in sorted(self._services.items()):
+            if not service.startswith(prefix):
+                continue
+            if addr.qpn in self._listeners and self.alive(addr.gid):
+                out[service] = addr
+        return out
+
     # -- fabric-scope SRQ ----------------------------------------------------
     def shared_srq(self, max_wr: int | None = None,
                    srq_limit: int | None = None) -> SharedReceiveQueue:

@@ -38,6 +38,7 @@ class RouteState:
     rate_increases = metrics.counter_attr()
     throttled_wrs = metrics.counter_attr()
     current_rate = metrics.gauge_attr()
+    alpha = metrics.gauge_attr()         # DCQCN congestion estimate
 
     def __init__(self, ctl: "RateController", src_gid: str, dst_gid: str):
         metrics.instance_scope(self, f"route:{src_gid}->{dst_gid}",
@@ -50,6 +51,29 @@ class RouteState:
         self.rate_decreases = 0
         self.rate_increases = 0
         self.throttled_wrs = 0
+        self.current_rate = self.rate
+
+    def react(self, ctl: "RateController", marked: bool):
+        """One DCQCN reaction-point update: multiplicative decrease
+        scaled by the moving congestion estimate on an ECN mark, alpha
+        decay + additive recovery otherwise. Invariants (property-tested
+        in tests/test_serve_cluster.py): ``min_rate <= rate <=
+        line_rate`` under ANY mark schedule, ``0 <= alpha <= 1``, and a
+        drained (mark-free) route recovers to line rate additively."""
+        if marked:
+            self.ecn_marks += 1
+            self.alpha = (1.0 - ctl.g) * self.alpha + ctl.g
+            new_rate = max(ctl.min_rate,
+                           self.rate * (1.0 - self.alpha / 2.0))
+            if new_rate < self.rate:
+                self.rate_decreases += 1
+            self.rate = new_rate
+        else:
+            self.alpha *= (1.0 - ctl.g)
+            if self.rate < ctl.line_rate:
+                self.rate = min(float(ctl.line_rate),
+                                self.rate + ctl.ai_increment)
+                self.rate_increases += 1
         self.current_rate = self.rate
 
 
@@ -144,18 +168,4 @@ class RateController:
             if peer is None:
                 continue
             depth = len(peer.recv_cq)
-            if depth > self.ecn_watermark:
-                st.ecn_marks += 1
-                st.alpha = (1.0 - self.g) * st.alpha + self.g
-                new_rate = max(self.min_rate,
-                               st.rate * (1.0 - st.alpha / 2.0))
-                if new_rate < st.rate:
-                    st.rate_decreases += 1
-                st.rate = new_rate
-            else:
-                st.alpha *= (1.0 - self.g)
-                if st.rate < self.line_rate:
-                    st.rate = min(float(self.line_rate),
-                                  st.rate + self.ai_increment)
-                    st.rate_increases += 1
-            st.current_rate = st.rate
+            st.react(self, depth > self.ecn_watermark)

@@ -50,6 +50,23 @@ def test_train_checkpoint_serve_roundtrip(tmp_path):
     assert eng.ring.dma_writes >= 1
 
 
+def test_serve_cluster_example():
+    """The ISSUE 10 walkthrough end to end: 2 prefill + 2 decode pods,
+    one decode pod killed mid-run, every request completes via failover
+    bit-exact vs the single-pod oracle (the example asserts all of it —
+    a non-zero exit here is the cluster breaking, not the rig)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(repo, "examples",
+                                      "serve_cluster.py")],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "EXACT" in r.stdout and "DIFFERS" not in r.stdout
+    assert "killed mid-run" in r.stdout
+
+
 def test_hlo_cost_parser_calibration():
     """The trip-count-aware parser equals known FLOPs for a scanned matmul
     chain — the calibration behind §Roofline's compute term."""
